@@ -1,0 +1,176 @@
+"""Table III analogue: four complex discovery tasks, each implemented with
+(1) BLEND (optimized), (2) B-NO (no plan optimizer), (3) the federated
+baseline systems, measuring runtime / LOC / #systems / #indexes."""
+from __future__ import annotations
+
+import inspect
+import time
+
+import numpy as np
+
+from benchmarks.common import row, save_json, timeit
+from repro.core.baselines import JosieLike, MateLike, QcrLike
+from repro.core.executor import Executor
+from repro.core.index import build_index
+from repro.core.lake import correlation_lake, mc_joinable_lake, synthetic_lake
+from repro.core.plan import Combiners, Plan, Seekers
+
+
+def _loc(fn) -> int:
+    src = inspect.getsource(fn).splitlines()
+    return len([l for l in src if l.strip() and not l.strip().startswith(("#", '"""', "def "))])
+
+
+# ------------------------------------------------------------------ task 1
+def negative_examples_blend(ex, pos, neg):
+    plan = Plan()
+    plan.add("pos", Seekers.MC(pos, k=60))
+    plan.add("neg", Seekers.MC(neg, k=60))
+    plan.add("out", Combiners.Difference(k=20), ["pos", "neg"])
+    return plan
+
+
+def negative_examples_baseline(mate, pos, neg):
+    # MATE + application-level row-by-row validation of negatives
+    pos_tables, _, _, _ = mate.query(pos, k=60)
+    result = []
+    for t in pos_tables:
+        bad = False
+        for (tt, r), rowvals in mate.rows.items():
+            if tt != t:
+                continue
+            for tup in neg:
+                from repro.core.hashing import hash_value
+                if all(hash_value(v) in rowvals for v in tup):
+                    bad = True
+                    break
+            if bad:
+                break
+        if not bad:
+            result.append(t)
+    return result[:20]
+
+
+# ------------------------------------------------------------------ task 2
+def imputation_blend(ex, complete, partial):
+    plan = Plan()
+    plan.add("examples", Seekers.MC(complete, k=60))
+    plan.add("query", Seekers.SC(partial, k=60))
+    plan.add("out", Combiners.Intersect(k=10), ["examples", "query"])
+    return plan
+
+
+def imputation_baseline(mate, josie, complete, partial):
+    mate_ids, _, _, _ = mate.query(complete, k=60)
+    josie_ids = josie.query(partial, k=60)
+    inter = [t for t in mate_ids if t in set(josie_ids)]
+    return inter[:10]
+
+
+# ------------------------------------------------------------------ task 3
+def feature_discovery_blend(ex, join_vals, target, feature):
+    plan = Plan()
+    plan.add("target_corr", Seekers.Correlation(join_vals, target, k=30))
+    plan.add("multicol", Seekers.Correlation(join_vals, feature, k=30))
+    plan.add("out", Combiners.Difference(k=10), ["target_corr", "multicol"])
+    return plan
+
+
+def feature_discovery_baseline(qcr, mate, join_vals, target, feature):
+    with_target = qcr.query(join_vals, target, k=30)
+    with_feature = set(qcr.query(join_vals, feature, k=30))
+    return [t for t in with_target if t not in with_feature][:10]
+
+
+# ------------------------------------------------------------------ task 4
+def multi_objective_blend(ex, keywords, cols, join_vals, target):
+    plan = Plan()
+    plan.add("kw", Seekers.KW(keywords, k=10))
+    for i, col in enumerate(cols):
+        plan.add(f"col{i}", Seekers.SC(col, k=40))
+    plan.add("counter", Combiners.Counter(k=10),
+             [f"col{i}" for i in range(len(cols))])
+    plan.add("corr", Seekers.Correlation(join_vals, target, k=10))
+    plan.add("out", Combiners.Union(k=40), ["kw", "counter", "corr"])
+    return plan
+
+
+def multi_objective_baseline(josie, qcr, union_base, keywords, cols,
+                             join_vals, target, query_table_idx):
+    kw_res = set(josie.query(keywords, k=10))
+    union_res = set(union_base.query(query_table_idx, k=10))
+    corr_res = set(qcr.query(join_vals, target, k=10))
+    return list(kw_res | union_res | corr_res)[:40]
+
+
+def main():
+    results = {}
+    # lakes sized so seeker work dominates dispatch overhead
+    lake_mc, tuples, _ = mc_joinable_lake(n_tables=200, rows=80, seed=31)
+    lake_cr, keys, target, _ = correlation_lake(n_tables=150, rows=120,
+                                                seed=32)
+    lake_gen = synthetic_lake(n_tables=300, rows=60, vocab=1500, seed=33)
+
+    # shared systems
+    ex_mc = Executor(build_index(lake_mc))
+    ex_cr = Executor(build_index(lake_cr))
+    ex_gen = Executor(build_index(lake_gen))
+    mate_mc, mate_gen = MateLike(lake_mc), MateLike(lake_gen)
+    josie_gen = JosieLike(lake_gen)
+    qcr_cr = QcrLike(lake_cr)
+    from repro.core.baselines import UnionBaseline
+    union_gen = UnionBaseline(lake_gen)
+
+    pos, neg = tuples[:10], tuples[10:14]
+    t0 = lake_gen.tables[5]
+    complete = [(t0.columns[0][r], t0.columns[1][r]) for r in range(10)]
+    partial = [t0.columns[0][r] for r in range(10, 40)]
+    feature = list(np.random.default_rng(0).normal(0, 1, len(target)))
+
+    tasks = {
+        "negative_examples": (
+            lambda opt: ex_mc.run(negative_examples_blend(ex_mc, pos, neg),
+                                  optimize=opt),
+            lambda: negative_examples_baseline(mate_mc, pos, neg),
+            negative_examples_blend, negative_examples_baseline, 1, "Multi"),
+        "imputation": (
+            lambda opt: ex_gen.run(imputation_blend(ex_gen, complete, partial),
+                                   optimize=opt),
+            lambda: imputation_baseline(mate_gen, josie_gen, complete, partial),
+            imputation_blend, imputation_baseline, 2, "Multi"),
+        "feature_discovery": (
+            lambda opt: ex_cr.run(feature_discovery_blend(ex_cr, keys, target,
+                                                          feature),
+                                  optimize=opt),
+            lambda: feature_discovery_baseline(qcr_cr, None, keys, target,
+                                               feature),
+            feature_discovery_blend, feature_discovery_baseline, 2, "Multi"),
+        "multi_objective": (
+            lambda opt: ex_gen.run(multi_objective_blend(
+                ex_gen, [t0.columns[0][0]], [list(t0.columns[0][:8]),
+                                             list(t0.columns[1][:8])],
+                list(t0.columns[0][:15]), list(range(15))), optimize=opt),
+            lambda: multi_objective_baseline(
+                josie_gen, QcrLike(lake_gen), union_gen, [t0.columns[0][0]],
+                None, list(t0.columns[0][:15]), list(range(15)), 5),
+            multi_objective_blend, multi_objective_baseline, 3, "Multi"),
+    }
+
+    for name, (blend_fn, base_fn, bsrc, srcb, n_sys, idx_kind) in tasks.items():
+        t_opt, _ = timeit(blend_fn, True, warmup=1, iters=3)
+        t_no, _ = timeit(blend_fn, False, warmup=1, iters=3)
+        t_base, _ = timeit(base_fn, warmup=0, iters=3)
+        results[name] = {
+            "blend_s": t_opt, "b_no_s": t_no, "baseline_s": t_base,
+            "loc_blend": _loc(bsrc), "loc_baseline": _loc(srcb),
+            "n_systems_baseline": n_sys, "indexes_baseline": idx_kind,
+        }
+        row(f"complex/{name}/blend", t_opt * 1e6,
+            f"b_no={t_no*1e6:.0f}us baseline={t_base*1e6:.0f}us "
+            f"loc={_loc(bsrc)}v{_loc(srcb)}")
+    save_json("table3_complex_tasks", results)
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Table VIII analogue: unified index storage vs the sum of standalone
+indexes (Pr.3) on lakes of increasing size."""
+from __future__ import annotations
+
+from benchmarks.common import row, save_json
+from repro.core.baselines import JosieLike, MateLike, QcrLike, UnionBaseline
+from repro.core.index import build_index
+from repro.core.lake import synthetic_lake
+
+
+def main():
+    out = {}
+    for n_tables in (50, 150, 400):
+        lake = synthetic_lake(n_tables=n_tables, rows=40, cols=4,
+                              vocab=2000, seed=91)
+        idx = build_index(lake)
+        blend = idx.storage_bytes()
+        parts = {
+            "josie": JosieLike(lake).storage_bytes(),
+            "mate": MateLike(lake).storage_bytes(),
+            "qcr": QcrLike(lake).storage_bytes(),
+            "union": UnionBaseline(lake).storage_bytes(),
+        }
+        combined = sum(parts.values())
+        out[n_tables] = {"blend_bytes": blend, "combined_bytes": combined,
+                         "parts": parts, "ratio": blend / combined,
+                         "postings": idx.n_postings}
+        row(f"index_size/{n_tables}t", blend,
+            f"combined={combined} ratio={blend/combined:.2f}")
+    save_json("table8_index_size", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

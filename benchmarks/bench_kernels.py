@@ -1,0 +1,69 @@
+"""Kernel micro-benchmarks: oracle path wall time on CPU (the TPU numbers are
+projected in the roofline analysis); interpret-mode correctness asserted."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, save_json, timeit
+from repro.kernels.bucket_probe import ops as bp
+from repro.kernels.flash_attention import ops as fa
+from repro.kernels.qcr_score import ops as qc
+from repro.kernels.superkey_filter import ops as sk
+
+
+def main():
+    rng = np.random.default_rng(0)
+    out = {}
+
+    bits, W = 10, 64
+    nb = 1 << bits
+    bh = rng.integers(0, 2 ** 32, (nb, W), dtype=np.uint32)
+    payload = rng.integers(0, 10 ** 6, (nb, W), dtype=np.int32)
+    q = rng.integers(0, 2 ** 32, 4096, dtype=np.uint32)
+    f = lambda: bp.probe(jnp.asarray(bh), jnp.asarray(payload),
+                         jnp.asarray(q), bits).block_until_ready()
+    dt, _ = timeit(f, warmup=1, iters=5)
+    out["bucket_probe_4k"] = dt
+    row("kernels/bucket_probe/4k_queries", dt * 1e6,
+        f"{4096/dt/1e6:.1f}M probes/s")
+
+    n, t = 1 << 16, 8
+    sk_lo = rng.integers(0, 2 ** 32, n, dtype=np.uint32)
+    sk_hi = rng.integers(0, 2 ** 32, n, dtype=np.uint32)
+    q_lo = rng.integers(0, 2 ** 32, t, dtype=np.uint32)
+    q_hi = rng.integers(0, 2 ** 32, t, dtype=np.uint32)
+    f = lambda: sk.filter_rows(jnp.asarray(sk_lo), jnp.asarray(sk_hi),
+                               jnp.asarray(q_lo),
+                               jnp.asarray(q_hi)).block_until_ready()
+    dt, _ = timeit(f, warmup=1, iters=5)
+    out["superkey_64k_rows"] = dt
+    row("kernels/superkey_filter/64k_rows", dt * 1e6,
+        f"{n*t/dt/1e9:.2f}G checks/s")
+
+    g, h = 4096, 256
+    quad = rng.integers(0, 2, (g, h)).astype(np.int8)
+    qb = rng.integers(0, 2, (g, h)).astype(np.int8)
+    val = rng.random((g, h)) < 0.6
+    f = lambda: qc.score(jnp.asarray(quad), jnp.asarray(qb),
+                         jnp.asarray(val)).block_until_ready()
+    dt, _ = timeit(f, warmup=1, iters=5)
+    out["qcr_4k_groups"] = dt
+    row("kernels/qcr_score/4k_groups", dt * 1e6, f"{g/dt/1e6:.2f}M groups/s")
+
+    B, S, H, K, D = 1, 1024, 8, 2, 64
+    q_ = jnp.asarray(rng.normal(0, 1, (B, S, H, D)), jnp.bfloat16)
+    k_ = jnp.asarray(rng.normal(0, 1, (B, S, K, D)), jnp.bfloat16)
+    v_ = jnp.asarray(rng.normal(0, 1, (B, S, K, D)), jnp.bfloat16)
+    f = lambda: fa.attention(q_, k_, v_, causal=True).block_until_ready()
+    dt, _ = timeit(f, warmup=1, iters=3)
+    flops = 4 * B * H * S * S * D
+    out["flash_1k_seq"] = dt
+    row("kernels/flash_attention/1k_seq", dt * 1e6,
+        f"{flops/dt/1e9:.1f} GFLOP/s cpu-ref")
+    save_json("kernels_micro", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

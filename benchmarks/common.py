@@ -1,0 +1,31 @@
+"""Shared benchmark helpers: timing, CSV rows, result persistence."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results"
+RESULTS.mkdir(exist_ok=True)
+
+ROWS: list = []
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3, **kw):
+    for _ in range(warmup):
+        fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / iters
+    return dt, out
+
+
+def row(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def save_json(name: str, payload: dict):
+    (RESULTS / f"{name}.json").write_text(json.dumps(payload, indent=2,
+                                                     default=str))

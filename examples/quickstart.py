@@ -1,0 +1,44 @@
+"""Quickstart: build a lake, build the unified index, run a discovery plan.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core.executor import Executor
+from repro.core.index import build_index
+from repro.core.lake import synthetic_lake
+from repro.core.plan import Combiners, Plan, Seekers
+
+
+def main():
+    lake = synthetic_lake(n_tables=100, rows=30, vocab=800, seed=0)
+    print("lake:", lake.stats())
+
+    index = build_index(lake)
+    print(f"unified index: {index.n_postings} postings, "
+          f"{index.storage_bytes()/1e6:.1f} MB")
+
+    ex = Executor(index)
+
+    # Fig 1's task: tables containing ("HR", "Firenze")-style positive
+    # examples and a set of joinable department values, minus tables with the
+    # outdated pair.
+    t = lake.tables[7]
+    positives = [(t.columns[0][r], t.columns[1][r]) for r in range(4)]
+    outdated = [(t.columns[0][5], t.columns[1][6])]   # misaligned pair
+    departments = list(t.columns[0][:12])
+
+    plan = Plan()
+    plan.add("examples", Seekers.MC(positives, k=50))
+    plan.add("departments", Seekers.SC(departments, k=50))
+    plan.add("relevant", Combiners.Intersect(k=20), ["examples", "departments"])
+    plan.add("outdated", Seekers.MC(outdated, k=50))
+    plan.add("answer", Combiners.Difference(k=10), ["relevant", "outdated"])
+
+    rs, info = ex.run(plan, optimize=True)
+    print("optimized execution order:", info.order)
+    print("top tables:", [lake.tables[i].name for i in rs.ids()])
+    print(f"total {info.total_seconds*1000:.1f} ms "
+          f"({ {k: round(v*1000, 1) for k, v in info.node_seconds.items()} })")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""End-to-end driver: serve batched discovery requests over a resident lake.
+
+This is the paper's deployment mode — the unified index lives in memory and
+heterogeneous discovery plans stream in.  Reports per-plan latency with and
+without the plan optimizer (the Table III/IV effect, live).
+
+    PYTHONPATH=src python examples/serve_discovery.py
+"""
+import numpy as np
+
+from repro.core.cost_model import train_cost_model
+from repro.core.plan import Combiners, Plan, Seekers
+from repro.serve.engine import DiscoveryEngine
+from repro.core.lake import synthetic_lake
+
+
+def build_request(lake, rng, kind):
+    t = lake.tables[int(rng.integers(0, lake.n_tables))]
+    rows = rng.choice(t.n_rows, 8, replace=False)
+    plan = Plan()
+    if kind == "imputation":
+        plan.add("mc", Seekers.MC([(t.columns[0][r], t.columns[1][r])
+                                   for r in rows], k=40))
+        plan.add("sc", Seekers.SC([t.columns[0][r] for r in rows], k=40))
+        plan.add("out", Combiners.Intersect(k=10), ["mc", "sc"])
+    elif kind == "union":
+        for c in range(min(3, t.n_cols)):
+            plan.add(f"c{c}", Seekers.SC(list(t.columns[c]), k=60))
+        plan.add("out", Combiners.Counter(k=10),
+                 [f"c{c}" for c in range(min(3, t.n_cols))])
+    else:   # enrichment
+        plan.add("kw", Seekers.KW([t.columns[0][0], t.columns[1][1]], k=10))
+        plan.add("corr", Seekers.Correlation(
+            [t.columns[0][r] for r in rows], list(map(float, range(8))), k=10))
+        plan.add("out", Combiners.Union(k=20), ["kw", "corr"])
+    return plan
+
+
+def main():
+    rng = np.random.default_rng(0)
+    lake = synthetic_lake(n_tables=200, rows=40, vocab=1500, seed=1)
+    engine = DiscoveryEngine(lake)
+    print("index ready:", engine.index.n_postings, "postings")
+    engine.cost_model = train_cost_model(engine.executor, lake, n_samples=15)
+    print("cost model trained")
+
+    kinds = ["imputation", "union", "enrichment"]
+    requests = [build_request(lake, rng, kinds[i % 3]) for i in range(12)]
+
+    # warmup: compile all capacity buckets once (a production engine keeps
+    # these jit variants resident; see DESIGN.md on static-shape serving)
+    engine.serve_many(requests, optimize=True)
+    engine.serve_many(requests, optimize=False)
+
+    opt = engine.serve_many(requests, optimize=True)
+    naive = engine.serve_many(requests, optimize=False)
+    t_opt = sum(r.seconds for r in opt)
+    t_naive = sum(r.seconds for r in naive)
+    print(f"served {len(requests)} plans | optimized {t_opt*1000:.0f} ms "
+          f"| naive {t_naive*1000:.0f} ms "
+          f"| speedup {t_naive/max(t_opt,1e-9):.2f}x")
+    for i, r in enumerate(opt[:4]):
+        print(f"  req{i} ({kinds[i%3]:11s}) {r.seconds*1000:6.1f} ms "
+              f"-> tables {r.table_ids[:5]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""The paper's own workload config: BLEND over a Gittables-scale lake.
+
+Table II of the paper: Gittables = 1.5M tables / 16.8M columns / 345M rows;
+we size the unified index at 1.4B postings (cells) with a 350M-posting
+numeric view.  This is the config behind the ``blend-discovery`` dry-run
+cells (``python -m repro.launch.dryrun --arch blend-discovery``) and the
+distributed-seeker roofline rows.
+"""
+from repro.core.distributed import GITTABLES_SCALE
+
+CONFIG = dict(
+    name="blend-gittables",
+    **GITTABLES_SCALE,
+    # query-shape defaults for the dry-run cells
+    nq=1024,              # values per SC/C probe batch
+    n_tuples=256,         # MC tuples per batch
+    n_cols=2,             # MC composite-key width
+    m_cap=64,             # static matches per value
+    row_cap=8,            # numeric cells per row (correlation join)
+    h_sample=256,         # QCR sketch size (query-time, paper §V)
+)

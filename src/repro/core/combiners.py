@@ -1,0 +1,79 @@
+"""Combiners: TPU-native set algebra over dense per-table result vectors.
+
+A seeker's result set is (scores f32 [n_tables], mask bool [n_tables]) with
+the mask holding its top-k selection — combiners are elementwise AND / OR /
+ANDNOT / + over these vectors, which is exactly the representation that makes
+set ops free on a vector machine (the paper's combiners are SQL set ops).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class ResultSet:
+    scores: jnp.ndarray          # f32 [n_tables]
+    mask: jnp.ndarray            # bool [n_tables]
+
+    def ids(self):
+        """Selected table ids sorted by score desc (host-side)."""
+        s = np.asarray(self.scores)
+        m = np.asarray(self.mask)
+        ids = np.nonzero(m)[0]
+        return ids[np.argsort(-s[ids], kind="stable")]
+
+
+def topk_result(scores, k: int) -> ResultSet:
+    """Select the top-k positive-score tables into a ResultSet."""
+    k = min(k, scores.shape[0])
+    vals, ids = jax.lax.top_k(scores, k)
+    keep = vals > 0
+    mask = jnp.zeros(scores.shape[0], bool).at[ids].set(keep)
+    return ResultSet(scores=jnp.where(mask, scores, 0.0), mask=mask)
+
+
+def intersect(results, k: int | None = None) -> ResultSet:
+    mask = results[0].mask
+    scores = results[0].scores
+    for r in results[1:]:
+        mask = mask & r.mask
+        scores = scores + r.scores
+    scores = jnp.where(mask, scores, 0.0)
+    return _maybe_topk(scores, mask, k)
+
+
+def union(results, k: int | None = None) -> ResultSet:
+    mask = results[0].mask
+    scores = results[0].scores
+    for r in results[1:]:
+        mask = mask | r.mask
+        scores = jnp.maximum(scores, r.scores)
+    scores = jnp.where(mask, scores, 0.0)
+    return _maybe_topk(scores, mask, k)
+
+
+def difference(a: ResultSet, b: ResultSet, k: int | None = None) -> ResultSet:
+    mask = a.mask & ~b.mask
+    scores = jnp.where(mask, a.scores, 0.0)
+    return _maybe_topk(scores, mask, k)
+
+
+def counter(results, k: int | None = None) -> ResultSet:
+    """Count occurrences of each table across the input sets, rank by count
+    (the paper's union-search aggregator)."""
+    counts = jnp.zeros_like(results[0].scores)
+    for r in results:
+        counts = counts + r.mask.astype(jnp.float32)
+    mask = counts > 0
+    return _maybe_topk(counts, mask, k)
+
+
+def _maybe_topk(scores, mask, k):
+    if k is None:
+        return ResultSet(scores=scores, mask=mask)
+    rs = topk_result(scores, k)
+    return rs

@@ -1,0 +1,368 @@
+"""Distributed BLEND: hash-partitioned index shards + shard_map seekers.
+
+The unified index is sharded across *every* mesh axis (pod x data x model —
+a lake index is pure capacity; there is no 'model' in discovery).  Because
+the postings are globally sorted by hash, contiguous shards are hash ranges:
+a probe runs entirely shard-local and per-table score vectors are combined
+with one ``psum`` — the same "push compute to the data" layering the paper
+gets from its in-DB pushdown.  Cross-shard joins (the MC validation and the
+correlation row-join) all-gather only the *candidate rowkeys* (tiny) and
+re-reduce membership with a second psum.
+
+``dryrun_discovery()`` lowers a representative multi-seeker plan over a
+Gittables-scale index (1.4B postings) on the production mesh — the
+blend-discovery dry-run cell.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import seekers as seek
+
+IDX_KEYS_MAIN = ("hash", "table", "col", "row", "sk_lo", "sk_hi", "quadrant",
+                 "rank_conv", "rank_rand")
+IDX_KEYS_NUM = ("num_rowkey", "num_table", "num_col", "num_quadrant",
+                "num_rank_conv", "num_rank_rand")
+
+
+def index_specs(mesh, n_postings: int, n_numeric: int):
+    """Sharding specs for the device-array dict: every array sharded on its
+    posting dim across all mesh axes."""
+    axes = tuple(mesh.axis_names)
+    return {k: NamedSharding(mesh, P(axes)) for k in IDX_KEYS_MAIN + IDX_KEYS_NUM}
+
+
+def shard_device_index(index, mesh):
+    """Place a host UnifiedIndex's device arrays onto the mesh (padding the
+    posting count to the device count)."""
+    dev = index.device_arrays()
+    n_dev = mesh.size
+    out = {}
+    for k, v in dev.items():
+        pad = (-v.shape[0]) % n_dev
+        if pad:
+            if k == "hash":          # sentinel: never matches a real hash
+                fill = jnp.full((1,), 0xFFFFFFFF, v.dtype)
+            elif k == "num_rowkey":  # sorted sentinel at the end
+                fill = jnp.full((1,), jnp.iinfo(jnp.int32).max, v.dtype)
+            else:
+                fill = jnp.zeros_like(v[-1:])
+            v = jnp.concatenate([v] + [fill] * pad)
+        out[k] = jax.device_put(v, NamedSharding(mesh, P(tuple(mesh.axis_names))))
+    return out
+
+
+def _linear_shard_index(mesh, axes):
+    idx = jax.lax.axis_index(axes[0])
+    for a in axes[1:]:
+        idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+    return idx
+
+
+def _boundary_duplicate(mesh, axes, idx, q_hash, q_mask, with_col: bool):
+    """Correction for hash runs straddling a shard boundary: if this shard's
+    first posting continues the previous shard's last (same hash[,table,col])
+    and that hash is queried, the distinct-count counted it twice."""
+    h0, t0, c0 = idx["hash"][0], idx["table"][0], idx["col"][0]
+    last = jnp.stack([idx["hash"][-1].astype(jnp.int32),
+                      idx["table"][-1], idx["col"][-1]])
+    gathered = jax.lax.all_gather(last, axes, tiled=False).reshape(-1, 3)
+    lin = _linear_shard_index(mesh, axes)
+    prev = gathered[jnp.maximum(lin - 1, 0)]
+    same = (prev[0] == h0.astype(jnp.int32)) & (prev[1] == t0) & (lin > 0)
+    if with_col:
+        same &= prev[2] == c0
+    queried = jnp.any((q_hash == h0) & q_mask)
+    return same & queried, t0, c0
+
+
+def make_distributed_sc(mesh, *, m_cap, n_tables, max_cols):
+    axes = tuple(mesh.axis_names)
+    idx_specs = {k: P(axes) for k in IDX_KEYS_MAIN + IDX_KEYS_NUM}
+
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(idx_specs, P(), P()), out_specs=P(),
+                       check_rep=False)
+    def run(idx, q_hash, q_mask):
+        pidx, valid, ovf = seek._expand_matches(idx["hash"], q_hash, q_mask,
+                                                m_cap)
+        t = idx["table"][pidx]
+        c = idx["col"][pidx]
+        contrib = valid & seek._first_occurrence(t, c)
+        flat = (t * max_cols + c).reshape(-1)
+        tc = jnp.zeros(n_tables * max_cols, jnp.float32).at[flat].add(
+            contrib.reshape(-1).astype(jnp.float32), mode="drop")
+        dup, t0, c0 = _boundary_duplicate(mesh, axes, idx, q_hash, q_mask, True)
+        tc = tc.at[t0 * max_cols + c0].add(-dup.astype(jnp.float32))
+        tc = jax.lax.psum(tc, axes)
+        return tc.reshape(n_tables, max_cols).max(axis=1), jax.lax.psum(ovf, axes)
+
+    return jax.jit(run)
+
+
+def make_distributed_kw(mesh, *, m_cap, n_tables):
+    axes = tuple(mesh.axis_names)
+    idx_specs = {k: P(axes) for k in IDX_KEYS_MAIN + IDX_KEYS_NUM}
+
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(idx_specs, P(), P()), out_specs=P(),
+                       check_rep=False)
+    def run(idx, q_hash, q_mask):
+        pidx, valid, ovf = seek._expand_matches(idx["hash"], q_hash, q_mask,
+                                                m_cap)
+        t = idx["table"][pidx]
+        contrib = valid & seek._first_occurrence(t)
+        scores = jnp.zeros(n_tables, jnp.float32).at[t.reshape(-1)].add(
+            contrib.reshape(-1).astype(jnp.float32), mode="drop")
+        dup, t0, _ = _boundary_duplicate(mesh, axes, idx, q_hash, q_mask, False)
+        scores = scores.at[t0].add(-dup.astype(jnp.float32))
+        return jax.lax.psum(scores, axes), jax.lax.psum(ovf, axes)
+
+    return jax.jit(run)
+
+
+def make_distributed_c(mesh, *, m_cap, row_cap, n_tables, max_cols, h_sample,
+                       row_stride, sampling="conv"):
+    """Correlation seeker: local join-side probe -> all-gather candidate
+    (rowkey, join_col, qbit) triples -> every shard joins its local numeric
+    postings -> psum the per-(t,cj,cn) agree/count segments."""
+    axes = tuple(mesh.axis_names)
+    idx_specs = {k: P(axes) for k in IDX_KEYS_MAIN + IDX_KEYS_NUM}
+
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(idx_specs, P(), P(), P()), out_specs=P(),
+                       check_rep=False)
+    def run(idx, qj_hash, q_mask, q_bit):
+        pidx, valid, ovf = seek._expand_matches(idx["hash"], qj_hash, q_mask,
+                                                m_cap)
+        t = idx["table"][pidx]
+        r = idx["row"][pidx]
+        cj = idx["col"][pidx]
+        rowkey = t.astype(jnp.int32) * row_stride + r.astype(jnp.int32)
+        rowkey = jnp.where(valid, rowkey, -1).reshape(-1)
+        cjf = cj.reshape(-1)
+        qbf = jnp.broadcast_to(q_bit[:, None], pidx.shape).reshape(-1)
+        # globalize candidates: [S, nq*m_cap] (tiny vs the index)
+        g_rk = jax.lax.all_gather(rowkey, axes, tiled=False).reshape(-1)
+        g_cj = jax.lax.all_gather(cjf, axes, tiled=False).reshape(-1)
+        g_qb = jax.lax.all_gather(qbf, axes, tiled=False).reshape(-1)
+        # local numeric join
+        nlo = jnp.searchsorted(idx["num_rowkey"], g_rk, side="left")
+        nhi = jnp.searchsorted(idx["num_rowkey"], g_rk, side="right")
+        nidx = nlo[:, None] + jnp.arange(row_cap)[None, :]
+        nvalid = (nidx < nhi[:, None]) & (g_rk >= 0)[:, None]
+        nidx = jnp.clip(nidx, 0, idx["num_rowkey"].shape[0] - 1)
+        ntab = idx["num_table"][nidx]
+        ncol = idx["num_col"][nidx]
+        nquad = idx["num_quadrant"][nidx]
+        rank = idx["num_rank_conv" if sampling == "conv"
+                   else "num_rank_rand"][nidx]
+        nvalid &= rank < h_sample
+        agree = (nquad == g_qb[:, None]) & nvalid
+        key = ((ntab * max_cols + g_cj[:, None]) * max_cols + ncol).reshape(-1)
+        dim = n_tables * max_cols * max_cols
+        n_all = jnp.zeros(dim, jnp.float32).at[key].add(
+            nvalid.reshape(-1).astype(jnp.float32), mode="drop")
+        n_agree = jnp.zeros(dim, jnp.float32).at[key].add(
+            agree.reshape(-1).astype(jnp.float32), mode="drop")
+        n_all = jax.lax.psum(n_all, axes)
+        n_agree = jax.lax.psum(n_agree, axes)
+        qcr = jnp.abs(2.0 * n_agree - n_all) / jnp.maximum(n_all, 1.0)
+        qcr = jnp.where(n_all >= 3, qcr, 0.0)
+        return qcr.reshape(n_tables, -1).max(axis=1), jax.lax.psum(ovf, axes)
+
+    return jax.jit(run)
+
+
+def make_distributed_mc(mesh, *, m_cap, n_tables, n_cols, row_stride):
+    """MC: local initiator probe + bloom -> all-gather candidate rowkeys ->
+    every shard checks membership of its local postings of each tuple column
+    -> psum membership -> replicated scoring."""
+    axes = tuple(mesh.axis_names)
+    idx_specs = {k: P(axes) for k in IDX_KEYS_MAIN + IDX_KEYS_NUM}
+
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(idx_specs, P(), P(), P(), P()), out_specs=P(),
+                       check_rep=False)
+    def run(idx, tuple_hashes, init_col, qk_lo, qk_hi):
+        nt = tuple_hashes.shape[0]
+        h0 = jnp.take_along_axis(tuple_hashes, init_col[:, None], 1)[:, 0]
+        q_mask = jnp.ones((nt,), bool)
+        pidx, valid, ovf = seek._expand_matches(idx["hash"], h0, q_mask, m_cap)
+        t = idx["table"][pidx]
+        r = idx["row"][pidx]
+        bloom = ((idx["sk_lo"][pidx] & qk_lo[:, None]) == qk_lo[:, None]) & \
+                ((idx["sk_hi"][pidx] & qk_hi[:, None]) == qk_hi[:, None])
+        valid &= bloom
+        rowkey = t.astype(jnp.int32) * row_stride + r.astype(jnp.int32)
+        rowkey = jnp.where(valid, rowkey, -1)                   # [nt, m_cap]
+        # globalize candidates per tuple: [S*m_cap] per tuple
+        g_rk = jax.lax.all_gather(rowkey, axes, tiled=False)    # [S, nt, m_cap]
+        g_rk = jnp.moveaxis(g_rk, 0, 1).reshape(nt, -1)         # [nt, S*m_cap]
+        # local membership of each tuple column at the candidate rows
+        members = []
+        for j in range(n_cols):
+            pj, vj, _ = seek._expand_matches(idx["hash"], tuple_hashes[:, j],
+                                             q_mask, m_cap)
+            rkj = idx["table"][pj].astype(jnp.int32) * row_stride + \
+                idx["row"][pj].astype(jnp.int32)
+            rkj = jnp.sort(jnp.where(vj, rkj, jnp.iinfo(jnp.int32).max), axis=1)
+            loc = jax.vmap(jnp.searchsorted)(rkj, g_rk)
+            loc = jnp.clip(loc, 0, m_cap - 1)
+            hit = jnp.take_along_axis(rkj, loc, axis=1) == g_rk
+            members.append(jax.lax.psum(hit.astype(jnp.int32), axes) > 0)
+        ok = g_rk >= 0
+        for j in range(n_cols):
+            ok &= members[j] | (init_col == j)[:, None]
+        tt = jnp.where(g_rk >= 0, g_rk // row_stride, 0)
+        per_tt = jnp.zeros((nt * n_tables,), jnp.float32).at[
+            (jnp.arange(nt)[:, None] * n_tables + tt).reshape(-1)].max(
+            ok.reshape(-1).astype(jnp.float32), mode="drop")
+        scores = per_tt.reshape(nt, n_tables).sum(axis=0)
+        return scores, jax.lax.psum(ovf, axes)
+
+    return jax.jit(run)
+
+
+# --------------------------------------------------------------------------
+# the blend-discovery dry-run cell (lake scale, production mesh)
+# --------------------------------------------------------------------------
+
+GITTABLES_SCALE = dict(n_postings=1_400_000_000, n_numeric=350_000_000,
+                       n_tables=1_500_000, max_cols=8, row_stride=1 << 8)
+
+
+def dryrun_discovery(multi_pod: bool = False, nq: int = 1024, m_cap: int = 64,
+                     n_tuples: int = 256, n_cols: int = 2, row_cap: int = 8):
+    """Lower + compile the distributed seekers over a Gittables-scale index
+    (ShapeDtypeStructs, no allocation) on the production mesh."""
+    from repro.launch import hlo_analysis
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    sc = GITTABLES_SCALE
+    n_dev = mesh.size
+    npad = ((sc["n_postings"] + n_dev - 1) // n_dev) * n_dev
+    nnum = ((sc["n_numeric"] + n_dev - 1) // n_dev) * n_dev
+    sds = jax.ShapeDtypeStruct
+    idx = {"hash": sds((npad,), jnp.uint32),
+           "table": sds((npad,), jnp.int32),
+           "col": sds((npad,), jnp.int32),
+           "row": sds((npad,), jnp.int32),
+           "sk_lo": sds((npad,), jnp.uint32),
+           "sk_hi": sds((npad,), jnp.uint32),
+           "quadrant": sds((npad,), jnp.int8),
+           "rank_conv": sds((npad,), jnp.int32),
+           "rank_rand": sds((npad,), jnp.int32),
+           "num_rowkey": sds((nnum,), jnp.int32),
+           "num_table": sds((nnum,), jnp.int32),
+           "num_col": sds((nnum,), jnp.int32),
+           "num_quadrant": sds((nnum,), jnp.int8),
+           "num_rank_conv": sds((nnum,), jnp.int32),
+           "num_rank_rand": sds((nnum,), jnp.int32)}
+
+    kw = dict(n_tables=sc["n_tables"], max_cols=sc["max_cols"])
+    fns = {
+        "sc": (make_distributed_sc(mesh, m_cap=m_cap, **kw),
+               (idx, sds((nq,), jnp.uint32), sds((nq,), jnp.bool_))),
+        "mc": (make_distributed_mc(mesh, m_cap=m_cap, n_tables=sc["n_tables"],
+                                   n_cols=n_cols, row_stride=sc["row_stride"]),
+               (idx, sds((n_tuples, n_cols), jnp.uint32),
+                sds((n_tuples,), jnp.int32), sds((n_tuples,), jnp.uint32),
+                sds((n_tuples,), jnp.uint32))),
+        "c": (make_distributed_c(mesh, m_cap=m_cap, row_cap=row_cap,
+                                 h_sample=256, row_stride=sc["row_stride"],
+                                 **kw),
+              (idx, sds((nq,), jnp.uint32), sds((nq,), jnp.bool_),
+               sds((nq,), jnp.int8))),
+    }
+    rec = {"arch": "blend-discovery",
+           "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+           "chips": mesh.size, "scale": sc, "status": "ok", "seekers": {}}
+    idx_sharding = index_specs(mesh, npad, nnum)
+    for name, (fn, args) in fns.items():
+        t0 = time.time()
+        with mesh:
+            lowered = fn.lower(*args)
+            compiled = lowered.compile()
+        text = compiled.as_text()
+        analysis = hlo_analysis.analyze(text)
+        mem = compiled.memory_analysis()
+        terms = hlo_analysis.roofline_terms(analysis, chips=mesh.size)
+        rec["seekers"][name] = {
+            "compile_s": round(time.time() - t0, 2),
+            "memory_gb_per_device": round(
+                (mem.argument_size_in_bytes + mem.temp_size_in_bytes +
+                 mem.output_size_in_bytes) / 1e9, 3),
+            "hlo": analysis, "roofline": terms,
+        }
+    return rec
+
+def make_distributed_c_topk(mesh, *, m_cap, row_cap, n_tables, max_cols,
+                            h_sample, row_stride, k=64, sampling="conv"):
+    """§Perf variant of the correlation seeker: instead of psum-ing the dense
+    [n_tables x max_cols^2] QCR segments to every device (2x full-buffer
+    all-reduce), reduce-scatter the segments, score the local slice, take a
+    per-shard top-k and all-gather only the winners.  Halves the collective
+    bytes and removes the replicated dense scoring."""
+    axes = tuple(mesh.axis_names)
+    idx_specs = {k2: P(axes) for k2 in IDX_KEYS_MAIN + IDX_KEYS_NUM}
+    n_dev = mesh.size
+    dim = n_tables * max_cols * max_cols
+    dim_pad = ((dim + n_dev - 1) // n_dev) * n_dev
+
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(idx_specs, P(), P(), P()), out_specs=(P(), P()),
+                       check_rep=False)
+    def run(idx, qj_hash, q_mask, q_bit):
+        pidx, valid, ovf = seek._expand_matches(idx["hash"], qj_hash, q_mask,
+                                                m_cap)
+        t = idx["table"][pidx]
+        r = idx["row"][pidx]
+        cj = idx["col"][pidx]
+        rowkey = t.astype(jnp.int32) * row_stride + r.astype(jnp.int32)
+        rowkey = jnp.where(valid, rowkey, -1).reshape(-1)
+        g_rk = jax.lax.all_gather(rowkey, axes, tiled=False).reshape(-1)
+        g_cj = jax.lax.all_gather(cj.reshape(-1), axes, tiled=False).reshape(-1)
+        qbf = jnp.broadcast_to(q_bit[:, None], pidx.shape).reshape(-1)
+        g_qb = jax.lax.all_gather(qbf, axes, tiled=False).reshape(-1)
+        nlo = jnp.searchsorted(idx["num_rowkey"], g_rk, side="left")
+        nhi = jnp.searchsorted(idx["num_rowkey"], g_rk, side="right")
+        nidx = nlo[:, None] + jnp.arange(row_cap)[None, :]
+        nvalid = (nidx < nhi[:, None]) & (g_rk >= 0)[:, None]
+        nidx = jnp.clip(nidx, 0, idx["num_rowkey"].shape[0] - 1)
+        ntab = idx["num_table"][nidx]
+        ncol = idx["num_col"][nidx]
+        nquad = idx["num_quadrant"][nidx]
+        rank = idx["num_rank_conv" if sampling == "conv"
+                   else "num_rank_rand"][nidx]
+        nvalid &= rank < h_sample
+        agree = (nquad == g_qb[:, None]) & nvalid
+        key = ((ntab * max_cols + g_cj[:, None]) * max_cols + ncol).reshape(-1)
+        n_all = jnp.zeros(dim_pad, jnp.float32).at[key].add(
+            nvalid.reshape(-1).astype(jnp.float32), mode="drop")
+        n_agree = jnp.zeros(dim_pad, jnp.float32).at[key].add(
+            agree.reshape(-1).astype(jnp.float32), mode="drop")
+        # reduce-scatter the segment sums: each shard owns dim_pad/n_dev keys
+        n_all = jax.lax.psum_scatter(n_all, axes, scatter_dimension=0,
+                                     tiled=True)
+        n_agree = jax.lax.psum_scatter(n_agree, axes, scatter_dimension=0,
+                                       tiled=True)
+        qcr = jnp.abs(2.0 * n_agree - n_all) / jnp.maximum(n_all, 1.0)
+        qcr = jnp.where(n_all >= 3, qcr, 0.0)
+        vals, loc = jax.lax.top_k(qcr, k)                # local winners
+        lin = _linear_shard_index(mesh, axes)
+        gids = (lin * (dim_pad // n_dev) + loc) // (max_cols * max_cols)
+        g_vals = jax.lax.all_gather(vals, axes, tiled=True)   # [n_dev*k]
+        g_ids = jax.lax.all_gather(gids, axes, tiled=True)
+        best, bloc = jax.lax.top_k(g_vals, k)
+        return g_ids[bloc], best
+
+    return jax.jit(run)

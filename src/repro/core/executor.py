@@ -1,0 +1,225 @@
+"""Plan executor: optimized (EG ordering + mask threading) and naive (B-NO).
+
+The executor owns the device-resident index arrays, hashes query values,
+chooses static match capacities from host-side planner statistics, and runs
+the plan DAG.  ``optimize=False`` reproduces the paper's B-NO configuration:
+same seekers and combiners, random/insertion seeker order, no intermediate-
+result threading.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import combiners as comb
+from repro.core import seekers as seek
+from repro.core.cost_model import CostModel
+from repro.core.hashing import hash_array, hash_value, row_superkey, split_u64
+from repro.core.index import UnifiedIndex
+from repro.core.optimizer import optimize as optimize_plan
+from repro.core.plan import Plan, SeekerSpec
+
+
+@dataclass
+class ExecInfo:
+    optimized: bool
+    node_seconds: dict = field(default_factory=dict)
+    order: list = field(default_factory=list)
+    overflow: int = 0
+
+    @property
+    def total_seconds(self) -> float:
+        return sum(self.node_seconds.values())
+
+
+def _pow2_at_least(n: int, lo: int = 8, hi: int = 1024) -> int:
+    m = lo
+    while m < min(n, hi):
+        m *= 2
+    return m
+
+
+class Executor:
+    def __init__(self, index: UnifiedIndex, m_cap_max: int = 1024,
+                 row_cap: int = 8):
+        self.index = index
+        self.dev = index.device_arrays()
+        self.n_tables = index.n_tables
+        self.max_cols = index.max_cols
+        self.m_cap_max = m_cap_max
+        self.row_cap = row_cap
+
+    # ------------------------------------------------------------------ util
+    def _hashed(self, values) -> np.ndarray:
+        """Hash + dedupe (SQL IN (...) set semantics)."""
+        h = hash_array(list(values))
+        return np.unique(h)
+
+    def seeker_stats(self, spec: SeekerSpec):
+        """(cardinality, n_cols, avg value frequency) — the cost features."""
+        if spec.kind == "MC":
+            freqs = []
+            for c in range(spec.n_cols):
+                h = self._hashed([t[c] for t in spec.values])
+                freqs.append(self.index.host_counts(h).mean())
+            avg = float(np.prod(freqs))
+            return (float(len(spec.values)), float(spec.n_cols), avg)
+        h = self._hashed(spec.values)
+        avg = float(self.index.host_counts(h).mean()) if len(h) else 0.0
+        return (float(len(spec.values)), float(spec.n_cols), avg)
+
+    def _mcap_for(self, hashes: np.ndarray) -> int:
+        counts = self.index.host_counts(hashes)
+        return _pow2_at_least(int(counts.max(initial=1)), hi=self.m_cap_max)
+
+    # --------------------------------------------------------------- seekers
+    def run_seeker(self, spec: SeekerSpec, allowed=None) -> comb.ResultSet:
+        if spec.kind in ("SC", "KW"):
+            h = self._hashed(spec.values)
+            m_cap = self._mcap_for(h)
+            qh = jnp.asarray(h)
+            qm = jnp.ones(len(h), bool)
+            fn = seek.sc_seeker if spec.kind == "SC" else seek.kw_seeker
+            kw = dict(m_cap=m_cap, n_tables=self.n_tables)
+            if spec.kind == "SC":
+                kw["max_cols"] = self.max_cols
+            scores, ovf = fn(self.dev, qh, qm, allowed=allowed, **kw)
+        elif spec.kind == "MC":
+            values = list(dict.fromkeys(spec.values))   # dedupe tuples
+            nt = len(values)
+            n_cols = spec.n_cols
+            th = np.stack([hash_array([t[c] for t in values])
+                           for c in range(n_cols)], axis=1)       # [nt, n_cols]
+            counts = np.stack([self.index.host_counts(th[:, c])
+                               for c in range(n_cols)], axis=1)
+            init_col = np.argmin(counts, axis=1).astype(np.int32)
+            qks = np.array([row_superkey(th[i], np.zeros(n_cols, np.int64))
+                            for i in range(nt)], np.uint64)
+            qk_lo, qk_hi = split_u64(qks)
+            m_cap = _pow2_at_least(int(counts.max(initial=1)), hi=self.m_cap_max)
+            args = (self.dev, jnp.asarray(th), jnp.asarray(init_col),
+                    jnp.asarray(qk_lo), jnp.asarray(qk_hi))
+            # stage 1: survivor counts after predicate + bloom -> the stage-2
+            # validation runs with compacted candidate buffers (this is where
+            # the threaded 'WHERE TableId IN (IR)' actually shrinks work)
+            surv = seek.mc_survivor_counts(*args, m_cap=m_cap, allowed=allowed)
+            m_cap2 = _pow2_at_least(int(jnp.max(surv)), hi=m_cap)
+            scores, _rows, ovf = seek.mc_seeker_compact(
+                *args, m_cap=m_cap, m_cap2=min(m_cap2, m_cap),
+                n_tables=self.n_tables, n_cols=n_cols,
+                row_stride=self.index.row_stride, allowed=allowed)
+        elif spec.kind == "C":
+            pairs = list(dict.fromkeys(zip(spec.values, spec.target)))
+            h = hash_array([p[0] for p in pairs])
+            tgt = np.array([float(p[1]) for p in pairs])
+            qbit = (tgt >= tgt.mean()).astype(np.int8)            # k0/k1 split
+            m_cap = self._mcap_for(h)
+            qh, qm = jnp.asarray(h), jnp.ones(len(h), bool)
+            kw = dict(m_cap=m_cap, row_cap=self.row_cap,
+                      n_tables=self.n_tables, max_cols=self.max_cols,
+                      h_sample=spec.h, sampling=spec.sampling,
+                      row_stride=self.index.row_stride, allowed=allowed)
+            if allowed is not None:
+                # two-stage: compact the join side to the surviving postings
+                surv = int(seek.c_survivor_counts(self.dev, qh, qm,
+                                                  m_cap=m_cap,
+                                                  allowed=allowed))
+                cap2 = _pow2_at_least(max(surv, 1), hi=len(h) * m_cap)
+                scores, ovf = seek.c_seeker_compact(self.dev, qh, qm,
+                                                    jnp.asarray(qbit),
+                                                    cap2=cap2, **kw)
+            else:
+                scores, ovf = seek.c_seeker(self.dev, qh, qm,
+                                            jnp.asarray(qbit), **kw)
+        else:
+            raise ValueError(spec.kind)
+        scores.block_until_ready()
+        self._last_overflow = int(ovf)
+        return comb.topk_result(scores, spec.k)
+
+    # ------------------------------------------------------------------ plan
+    def run(self, plan: Plan, optimize: bool = True,
+            cost_model: CostModel | None = None):
+        info = ExecInfo(optimized=optimize)
+        ep = optimize_plan(plan, self.seeker_stats, cost_model) if optimize \
+            else None
+        memo: dict[str, comb.ResultSet] = {}
+
+        def timed_seeker(name, spec, allowed=None):
+            t0 = time.perf_counter()
+            rs = self.run_seeker(spec, allowed=allowed)
+            info.node_seconds[name] = time.perf_counter() - t0
+            info.order.append(name)
+            info.overflow += self._last_overflow
+            return rs
+
+        def eval_node(name: str) -> comb.ResultSet:
+            if name in memo:
+                return memo[name]
+            node = plan.nodes[name]
+            if node.is_seeker:
+                rs = timed_seeker(name, node.spec)
+            else:
+                kind = node.spec.kind
+                k = node.spec.k
+                if optimize and ep is not None and name in ep.groups:
+                    rs = self._run_group(plan, ep.groups[name], node, info,
+                                         timed_seeker, eval_node, memo)
+                elif kind == "difference":
+                    a = eval_node(node.deps[0])
+                    b_node = plan.nodes[node.deps[1]]
+                    if optimize and b_node.is_seeker and \
+                            len(plan.consumers(b_node.name)) == 1 and \
+                            b_node.name not in memo:
+                        # rewriting: restrict the subtrahend to the minuend's
+                        # tables (WHERE TableId IN (IR_a))
+                        b = timed_seeker(b_node.name, b_node.spec,
+                                         allowed=a.mask)
+                        memo[b_node.name] = b
+                    else:
+                        b = eval_node(node.deps[1])
+                    rs = comb.difference(a, b, k)
+                else:
+                    deps = [eval_node(d) for d in node.deps]
+                    t0 = time.perf_counter()
+                    if kind == "intersect":
+                        rs = comb.intersect(deps, k)
+                    elif kind == "union":
+                        rs = comb.union(deps, k)
+                    elif kind == "counter":
+                        rs = comb.counter(deps, k)
+                    else:
+                        raise ValueError(kind)
+                    info.node_seconds[name] = time.perf_counter() - t0
+                    info.order.append(name)
+            memo[name] = rs
+            return rs
+
+        result = eval_node(plan.output)
+        return result, info
+
+    def _run_group(self, plan, eg, combiner_node, info, timed_seeker,
+                   eval_node, memo):
+        """Ranked execution-group run with mask threading (Intersection)."""
+        results = []
+        allowed = None
+        for sname in eg.seekers:
+            exclusive = len(plan.consumers(sname)) == 1
+            rs = timed_seeker(sname, plan.nodes[sname].spec,
+                              allowed=allowed if exclusive else None)
+            memo[sname] = rs
+            results.append(rs)
+            allowed = rs.mask if allowed is None else (allowed & rs.mask)
+        # non-seeker deps of the combiner are evaluated normally
+        for dep in combiner_node.deps:
+            if dep not in eg.seekers:
+                results.append(eval_node(dep))
+        t0 = time.perf_counter()
+        rs = comb.intersect(results, combiner_node.spec.k)
+        info.node_seconds[combiner_node.name] = time.perf_counter() - t0
+        info.order.append(combiner_node.name)
+        return rs

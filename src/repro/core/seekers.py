@@ -1,0 +1,310 @@
+"""The four BLEND seekers as static-shaped, jittable scan programs.
+
+Every seeker maps (index arrays, hashed query) -> dense per-table scores
+[n_tables] (the TPU-native result-set representation; combiners are
+elementwise set algebra over these vectors).  ``allowed`` is the optimizer's
+threaded intermediate-result mask — the TPU analogue of the paper's
+``WHERE TableId IN (...)`` query rewriting: postings from dead tables are
+zeroed *before* the expensive group-by / validation stages.
+
+Static capacities (``m_cap`` matches per value, ``row_cap`` numeric cells per
+row) keep shapes jit-stable; overflows are counted and surfaced, never
+silently dropped.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _expand_matches(idx_hash, q_hash, q_mask, m_cap):
+    """Postings range per query value, expanded to a static [nq, m_cap]."""
+    lo = jnp.searchsorted(idx_hash, q_hash, side="left")
+    hi = jnp.searchsorted(idx_hash, q_hash, side="right")
+    pidx = lo[:, None] + jnp.arange(m_cap)[None, :]
+    valid = (pidx < hi[:, None]) & q_mask[:, None]
+    pidx = jnp.clip(pidx, 0, idx_hash.shape[0] - 1)
+    overflow = jnp.sum(jnp.maximum(hi - lo - m_cap, 0))
+    return pidx, valid, overflow
+
+
+def _first_occurrence(*keys):
+    """Mask of first occurrence of a key combo along axis 1 (inputs sorted)."""
+    first = None
+    for k in keys:
+        prev = jnp.concatenate([jnp.full_like(k[:, :1], -1), k[:, :-1]], axis=1)
+        f = k != prev
+        first = f if first is None else (first | f)
+    return first
+
+
+# --------------------------------------------------------------------------
+# SC seeker — single-column join discovery (Listing 1)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("m_cap", "n_tables", "max_cols"))
+def sc_seeker(idx, q_hash, q_mask, *, m_cap, n_tables, max_cols, allowed=None):
+    """COUNT(DISTINCT CellValue) GROUP BY (TableId, ColumnId); table score =
+    best column.  Returns (scores f32 [n_tables], overflow)."""
+    pidx, valid, ovf = _expand_matches(idx["hash"], q_hash, q_mask, m_cap)
+    t = idx["table"][pidx]
+    c = idx["col"][pidx]
+    contrib = valid & _first_occurrence(t, c)
+    if allowed is not None:
+        contrib &= allowed[t]
+    flat = (t * max_cols + c).reshape(-1)
+    scores_tc = jnp.zeros(n_tables * max_cols, jnp.float32).at[flat].add(
+        contrib.reshape(-1).astype(jnp.float32), mode="drop")
+    return scores_tc.reshape(n_tables, max_cols).max(axis=1), ovf
+
+
+# --------------------------------------------------------------------------
+# KW seeker — keyword search (SC without the ColumnId group key)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("m_cap", "n_tables"))
+def kw_seeker(idx, q_hash, q_mask, *, m_cap, n_tables, allowed=None):
+    pidx, valid, ovf = _expand_matches(idx["hash"], q_hash, q_mask, m_cap)
+    t = idx["table"][pidx]
+    contrib = valid & _first_occurrence(t)
+    if allowed is not None:
+        contrib &= allowed[t]
+    scores = jnp.zeros(n_tables, jnp.float32).at[t.reshape(-1)].add(
+        contrib.reshape(-1).astype(jnp.float32), mode="drop")
+    return scores, ovf
+
+
+# --------------------------------------------------------------------------
+# MC seeker — multi-column join discovery (MATE-style, Listing 2)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("m_cap", "n_tables", "n_cols",
+                                             "use_superkey", "row_stride"))
+def mc_seeker(idx, tuple_hashes, init_col, qk_lo, qk_hi, *, m_cap, n_tables,
+              n_cols, row_stride=1 << 22, use_superkey=True, allowed=None):
+    """tuple_hashes: [nt, n_cols] hashed query tuples; init_col: [nt] index of
+    the least-frequent (initiator) value; qk_lo/hi: [nt] query superkeys.
+
+    Phase 1: probe the initiator value -> candidate rows.
+    Phase 2: XASH superkey bloom filter  ((row_sk & q_sk) == q_sk).
+    Phase 3: exact validation — every other column value must occur in the
+             same (table, row).
+    Returns (scores = matched-tuple count per table, row_counts = candidate
+    rows that survive per table (Table V TP metric), overflow)."""
+    nt = tuple_hashes.shape[0]
+    h0 = jnp.take_along_axis(tuple_hashes, init_col[:, None], 1)[:, 0]
+    q_mask = jnp.ones((nt,), bool)
+    pidx, valid, ovf = _expand_matches(idx["hash"], h0, q_mask, m_cap)
+    t = idx["table"][pidx]
+    r = idx["row"][pidx]
+    if allowed is not None:
+        valid &= allowed[t]
+    if use_superkey:
+        bloom = ((idx["sk_lo"][pidx] & qk_lo[:, None]) == qk_lo[:, None]) & \
+                ((idx["sk_hi"][pidx] & qk_hi[:, None]) == qk_hi[:, None])
+        valid &= bloom
+    rowkey = t.astype(jnp.int32) * row_stride + r.astype(jnp.int32)
+
+    ok = valid
+    for j in range(n_cols):                       # static, small
+        hj = tuple_hashes[:, j]
+        pj, vj, _ = _expand_matches(idx["hash"], hj, q_mask, m_cap)
+        tj = idx["table"][pj]
+        rj = idx["row"][pj]
+        rkj = tj.astype(jnp.int32) * row_stride + rj.astype(jnp.int32)
+        rkj = jnp.where(vj, rkj, -1)
+        member = jnp.any(rowkey[:, :, None] == rkj[:, None, :], axis=-1)
+        ok &= member | (init_col == j)[:, None]
+    # matched-tuple count per table (dedupe: one tuple counts once per table)
+    per_tt = jnp.zeros((nt * n_tables,), jnp.float32).at[
+        (jnp.arange(nt)[:, None] * n_tables + t).reshape(-1)].max(
+        ok.reshape(-1).astype(jnp.float32), mode="drop")
+    scores = per_tt.reshape(nt, n_tables).sum(axis=0)
+    row_counts = jnp.zeros(n_tables, jnp.float32).at[t.reshape(-1)].add(
+        ok.reshape(-1).astype(jnp.float32), mode="drop")
+    return scores, row_counts, ovf
+
+
+# --------------------------------------------------------------------------
+# MC capacity compaction — the TPU analogue of the paper's query rewriting.
+# The threaded predicate can't shrink a static-shape scan by itself; instead
+# the executor measures the survivor count (stage 1) and re-launches the
+# expensive validation with compacted candidate buffers (stage 2).  This is
+# where "WHERE TableId IN (IR)" actually reduces work on a vector machine.
+# --------------------------------------------------------------------------
+
+def _mc_candidates(idx, tuple_hashes, init_col, qk_lo, qk_hi, m_cap,
+                   use_superkey, allowed):
+    nt = tuple_hashes.shape[0]
+    h0 = jnp.take_along_axis(tuple_hashes, init_col[:, None], 1)[:, 0]
+    q_mask = jnp.ones((nt,), bool)
+    pidx, valid, ovf = _expand_matches(idx["hash"], h0, q_mask, m_cap)
+    t = idx["table"][pidx]
+    r = idx["row"][pidx]
+    if allowed is not None:
+        valid &= allowed[t]
+    if use_superkey:
+        bloom = ((idx["sk_lo"][pidx] & qk_lo[:, None]) == qk_lo[:, None]) & \
+                ((idx["sk_hi"][pidx] & qk_hi[:, None]) == qk_hi[:, None])
+        valid &= bloom
+    return t, r, valid, ovf
+
+
+@functools.partial(jax.jit, static_argnames=("m_cap", "use_superkey"))
+def mc_survivor_counts(idx, tuple_hashes, init_col, qk_lo, qk_hi, *, m_cap,
+                       use_superkey=True, allowed=None):
+    """Stage 1: candidates per tuple surviving the threaded predicate +
+    bloom prune (the planner picks the stage-2 capacity from the max)."""
+    _, _, valid, _ = _mc_candidates(idx, tuple_hashes, init_col, qk_lo,
+                                    qk_hi, m_cap, use_superkey, allowed)
+    return jnp.sum(valid, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("m_cap", "m_cap2", "n_tables",
+                                             "n_cols", "use_superkey",
+                                             "row_stride"))
+def mc_seeker_compact(idx, tuple_hashes, init_col, qk_lo, qk_hi, *, m_cap,
+                      m_cap2, n_tables, n_cols, row_stride=1 << 22,
+                      use_superkey=True, allowed=None):
+    """Stage 2: exact validation over compacted [nt, m_cap2] candidates
+    (m_cap2 << m_cap when the predicate filters hard)."""
+    nt = tuple_hashes.shape[0]
+    t, r, valid, ovf = _mc_candidates(idx, tuple_hashes, init_col, qk_lo,
+                                      qk_hi, m_cap, use_superkey, allowed)
+    # compact: move surviving candidates to the front, take m_cap2
+    order = jnp.argsort(~valid, axis=1, stable=True)[:, :m_cap2]
+    t = jnp.take_along_axis(t, order, axis=1)
+    r = jnp.take_along_axis(r, order, axis=1)
+    valid = jnp.take_along_axis(valid, order, axis=1)
+    rowkey = t.astype(jnp.int32) * row_stride + r.astype(jnp.int32)
+
+    q_mask = jnp.ones((nt,), bool)
+    ok = valid
+    for j in range(n_cols):
+        hj = tuple_hashes[:, j]
+        pj, vj, _ = _expand_matches(idx["hash"], hj, q_mask, m_cap)
+        tj = idx["table"][pj]
+        rj = idx["row"][pj]
+        rkj = tj.astype(jnp.int32) * row_stride + rj.astype(jnp.int32)
+        rkj = jnp.sort(jnp.where(vj, rkj, jnp.iinfo(jnp.int32).max), axis=1)
+        loc = jnp.clip(jax.vmap(jnp.searchsorted)(rkj, rowkey), 0, m_cap - 1)
+        member = jnp.take_along_axis(rkj, loc, axis=1) == rowkey
+        ok &= member | (init_col == j)[:, None]
+    per_tt = jnp.zeros((nt * n_tables,), jnp.float32).at[
+        (jnp.arange(nt)[:, None] * n_tables + t).reshape(-1)].max(
+        ok.reshape(-1).astype(jnp.float32), mode="drop")
+    scores = per_tt.reshape(nt, n_tables).sum(axis=0)
+    row_counts = jnp.zeros(n_tables, jnp.float32).at[t.reshape(-1)].add(
+        ok.reshape(-1).astype(jnp.float32), mode="drop")
+    return scores, row_counts, ovf
+
+
+# --------------------------------------------------------------------------
+# Correlation seeker — QCR in one pass (Listing 3)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("m_cap", "row_cap", "n_tables",
+                                             "max_cols", "h_sample", "sampling",
+                                             "min_support", "row_stride"))
+def c_seeker(idx, qj_hash, q_mask, q_bit, *, m_cap, row_cap, n_tables,
+             max_cols, h_sample, row_stride=1 << 22, sampling="conv",
+             min_support=3, allowed=None):
+    """qj_hash: hashed join-key values; q_bit[i] = 1 iff the query target for
+    key i is >= the target mean (the paper's k0/k1 split, done at parse time).
+
+    QCR = (2*(n_I + n_III) - N) / N  computed per (table, join_col, num_col)
+    triple via two segment-sums; table score = max |QCR| over triples with
+    N >= min_support.  h-sampling filters the numeric side by the indexed
+    convenience/random rank (sketch size chosen at query time)."""
+    pidx, valid, ovf = _expand_matches(idx["hash"], qj_hash, q_mask, m_cap)
+    t = idx["table"][pidx]
+    r = idx["row"][pidx]
+    cj = idx["col"][pidx]
+    rowkey = t.astype(jnp.int32) * row_stride + r.astype(jnp.int32)
+    rk_flat = rowkey.reshape(-1)
+
+    nlo = jnp.searchsorted(idx["num_rowkey"], rk_flat, side="left")
+    nhi = jnp.searchsorted(idx["num_rowkey"], rk_flat, side="right")
+    nidx = nlo[:, None] + jnp.arange(row_cap)[None, :]
+    nvalid = (nidx < nhi[:, None]) & valid.reshape(-1)[:, None]
+    nidx = jnp.clip(nidx, 0, idx["num_rowkey"].shape[0] - 1)
+
+    ntab = idx["num_table"][nidx]
+    ncol = idx["num_col"][nidx]
+    nquad = idx["num_quadrant"][nidx]
+    rank = idx["num_rank_conv" if sampling == "conv" else "num_rank_rand"][nidx]
+    nvalid &= rank < h_sample
+    if allowed is not None:
+        nvalid &= allowed[ntab]
+
+    qb = jnp.broadcast_to(q_bit[:, None], pidx.shape).reshape(-1)[:, None]
+    agree = (nquad == qb) & nvalid
+
+    key = ((ntab * max_cols + cj.reshape(-1)[:, None]) * max_cols + ncol)
+    key = key.reshape(-1)
+    dim = n_tables * max_cols * max_cols
+    n_all = jnp.zeros(dim, jnp.float32).at[key].add(
+        nvalid.reshape(-1).astype(jnp.float32), mode="drop")
+    n_agree = jnp.zeros(dim, jnp.float32).at[key].add(
+        agree.reshape(-1).astype(jnp.float32), mode="drop")
+    qcr = jnp.abs(2.0 * n_agree - n_all) / jnp.maximum(n_all, 1.0)
+    qcr = jnp.where(n_all >= min_support, qcr, 0.0)
+    return qcr.reshape(n_tables, -1).max(axis=1), ovf
+
+
+@functools.partial(jax.jit, static_argnames=("m_cap",))
+def c_survivor_counts(idx, qj_hash, q_mask, *, m_cap, allowed=None):
+    """Stage 1 for the compacted correlation seeker: join-side matches that
+    survive the threaded predicate."""
+    pidx, valid, _ = _expand_matches(idx["hash"], qj_hash, q_mask, m_cap)
+    if allowed is not None:
+        valid &= allowed[idx["table"][pidx]]
+    return jnp.sum(valid)
+
+
+@functools.partial(jax.jit, static_argnames=("m_cap", "cap2", "row_cap",
+                                             "n_tables", "max_cols",
+                                             "h_sample", "sampling",
+                                             "min_support", "row_stride"))
+def c_seeker_compact(idx, qj_hash, q_mask, q_bit, *, m_cap, cap2, row_cap,
+                     n_tables, max_cols, h_sample, row_stride=1 << 22,
+                     sampling="conv", min_support=3, allowed=None):
+    """Stage 2: the numeric row-join + QCR scoring runs over the compacted
+    [cap2] surviving join-side postings instead of [nq*m_cap]."""
+    pidx, valid, ovf = _expand_matches(idx["hash"], qj_hash, q_mask, m_cap)
+    t = idx["table"][pidx]
+    if allowed is not None:
+        valid &= allowed[t]
+    rowkey = (t.astype(jnp.int32) * row_stride +
+              idx["row"][pidx].astype(jnp.int32))
+    cj = idx["col"][pidx]
+    qb = jnp.broadcast_to(q_bit[:, None], pidx.shape)
+    flat_valid = valid.reshape(-1)
+    (keep,) = jnp.nonzero(flat_valid, size=cap2, fill_value=0)
+    kv = flat_valid[keep]
+    rk = jnp.where(kv, rowkey.reshape(-1)[keep], -1)
+    cjf = cj.reshape(-1)[keep]
+    qbf = qb.reshape(-1)[keep]
+
+    nlo = jnp.searchsorted(idx["num_rowkey"], rk, side="left")
+    nhi = jnp.searchsorted(idx["num_rowkey"], rk, side="right")
+    nidx = nlo[:, None] + jnp.arange(row_cap)[None, :]
+    nvalid = (nidx < nhi[:, None]) & kv[:, None] & (rk >= 0)[:, None]
+    nidx = jnp.clip(nidx, 0, idx["num_rowkey"].shape[0] - 1)
+    ntab = idx["num_table"][nidx]
+    ncol = idx["num_col"][nidx]
+    nquad = idx["num_quadrant"][nidx]
+    rank = idx["num_rank_conv" if sampling == "conv" else "num_rank_rand"][nidx]
+    nvalid &= rank < h_sample
+    agree = (nquad == qbf[:, None]) & nvalid
+    key = ((ntab * max_cols + cjf[:, None]) * max_cols + ncol).reshape(-1)
+    dim = n_tables * max_cols * max_cols
+    n_all = jnp.zeros(dim, jnp.float32).at[key].add(
+        nvalid.reshape(-1).astype(jnp.float32), mode="drop")
+    n_agree = jnp.zeros(dim, jnp.float32).at[key].add(
+        agree.reshape(-1).astype(jnp.float32), mode="drop")
+    qcr = jnp.abs(2.0 * n_agree - n_all) / jnp.maximum(n_all, 1.0)
+    qcr = jnp.where(n_all >= min_support, qcr, 0.0)
+    return qcr.reshape(n_tables, -1).max(axis=1), ovf

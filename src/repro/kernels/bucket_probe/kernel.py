@@ -1,0 +1,51 @@
+"""Pallas TPU kernel: padded radix-bucket hash probe.
+
+The unified index's bucket table ([2^bits, W] hashes + payloads) stays in
+HBM/ANY; each grid step owns a tile of queries in VMEM, DMAs the bucket row
+per query (a bounded, rectangular gather — the TPU replacement for B-tree
+pointer chasing) and emits matching payload offsets via a vectorized compare.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _probe_kernel(q_ref, bh_ref, bp_ref, out_ref, *, bucket_bits, width):
+    shift = 32 - bucket_bits
+    qb = q_ref[...]                                     # [QB] u32 in VMEM
+
+    def body(i, _):
+        q = qb[i]
+        row = (q >> shift).astype(jnp.int32)
+        hashes = pl.load(bh_ref, (pl.ds(row, 1), pl.ds(0, width)))  # [1, W]
+        payload = pl.load(bp_ref, (pl.ds(row, 1), pl.ds(0, width)))
+        hit = hashes == q
+        out = jnp.where(hit, payload, -1)
+        pl.store(out_ref, (pl.ds(i, 1), pl.ds(0, width)), out)
+        return 0
+
+    jax.lax.fori_loop(0, qb.shape[0], body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("bucket_bits", "q_block",
+                                             "interpret"))
+def bucket_probe(bucket_hashes, bucket_payload, queries, *, bucket_bits,
+                 q_block=256, interpret=False):
+    m = queries.shape[0]
+    width = bucket_hashes.shape[1]
+    assert m % q_block == 0, "pad queries to q_block"
+    grid = (m // q_block,)
+    return pl.pallas_call(
+        functools.partial(_probe_kernel, bucket_bits=bucket_bits, width=width),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((q_block,), lambda i: (i,)),
+            pl.BlockSpec(memory_space=pl.ANY),     # bucket table stays in HBM
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((q_block, width), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, width), jnp.int32),
+        interpret=interpret,
+    )(queries, bucket_hashes, bucket_payload)

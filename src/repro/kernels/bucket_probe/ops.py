@@ -1,0 +1,26 @@
+"""Jitted wrapper: pads queries and dispatches kernel vs oracle.
+
+On CPU (tests / benches) the oracle path runs; on TPU the Pallas kernel.
+``interpret=True`` forces the kernel body through the Pallas interpreter for
+correctness validation anywhere.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bucket_probe.kernel import bucket_probe
+from repro.kernels.bucket_probe.ref import bucket_probe_ref
+
+
+def probe(bucket_hashes, bucket_payload, queries, bucket_bits, *,
+          use_kernel=None, interpret=None, q_block=256):
+    on_tpu = jax.default_backend() == "tpu"
+    use_kernel = on_tpu if use_kernel is None else use_kernel
+    if not use_kernel:
+        return bucket_probe_ref(bucket_hashes, bucket_payload, queries,
+                                bucket_bits)
+    pad = (-queries.shape[0]) % q_block
+    q = jnp.pad(queries, (0, pad), constant_values=jnp.uint32(0xFFFFFFFF))
+    out = bucket_probe(bucket_hashes, bucket_payload, q,
+                       bucket_bits=bucket_bits, q_block=q_block,
+                       interpret=bool(interpret) and not on_tpu)
+    return out[: queries.shape[0]]

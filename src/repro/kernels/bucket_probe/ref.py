@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the bucket probe."""
+import jax.numpy as jnp
+
+
+def bucket_probe_ref(bucket_hashes, bucket_payload, queries, bucket_bits):
+    """bucket_hashes/payload: [NB, W]; queries: [M] u32.
+    Returns payload where hash matches else -1: [M, W] i32."""
+    shift = 32 - bucket_bits
+    rows = (queries >> shift).astype(jnp.int32)          # [M]
+    bh = bucket_hashes[rows]                             # [M, W]
+    bp = bucket_payload[rows]
+    hit = bh == queries[:, None]
+    return jnp.where(hit, bp, -1)

@@ -1,0 +1,26 @@
+"""Jitted wrapper matching the model-side chunked_attention signature."""
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def attention(q, k, v, *, causal=True, q_block=128, kv_block=128,
+              use_kernel=None, interpret=None):
+    """q: [B, Sq, H, D]; k/v: [B, Skv, K, D] -> [B, Sq, H, D]."""
+    on_tpu = jax.default_backend() == "tpu"
+    use_kernel = on_tpu if use_kernel is None else use_kernel
+    if not use_kernel:
+        return attention_ref(q, k, v, causal=causal)
+    B, Sq, H, D = q.shape
+    Skv, Kh = k.shape[1], k.shape[2]
+    G = H // Kh
+    kx = jnp.repeat(k, G, axis=2)            # expand GQA to per-head kv
+    vx = jnp.repeat(v, G, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kf = kx.transpose(0, 2, 1, 3).reshape(B * H, Skv, D)
+    vf = vx.transpose(0, 2, 1, 3).reshape(B * H, Skv, D)
+    o = flash_attention(qf, kf, vf, q_block=q_block, kv_block=kv_block,
+                        causal=causal, interpret=bool(interpret) and not on_tpu)
+    return o.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle: full-materialization attention."""
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal=True):
+    """q: [B, Sq, H, D]; k/v: [B, Skv, K, D], H = K*G."""
+    B, Sq, H, D = q.shape
+    Skv, Kh = k.shape[1], k.shape[2]
+    G = H // Kh
+    qg = q.reshape(B, Sq, Kh, G, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bshd->bhgqs", qg, kf) / jnp.sqrt(D)
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Skv), bool), Skv - Sq)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgqs,bshd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)

@@ -1,0 +1,39 @@
+"""Pallas TPU kernel: QCR correlation scores over padded sketch groups.
+
+Input layout: one row per (table, join_col, num_col) group holding up to H
+h-sampled (quadrant, query-bit) pairs.  The kernel fuses the agreement
+compare, masked reduction and the (2a-n)/n epilogue in VMEM — one HBM pass
+over the sketch matrix (the correlation seeker's scoring hot loop).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qcr_kernel(quad_ref, qbit_ref, valid_ref, out_ref):
+    quad = quad_ref[...]
+    qbit = qbit_ref[...]
+    valid = valid_ref[...]
+    v = valid.astype(jnp.float32)
+    agree = jnp.where(valid & (quad == qbit), 1.0, 0.0)
+    n = jnp.sum(v, axis=1)
+    a = jnp.sum(agree, axis=1)
+    qcr = jnp.abs(2.0 * a - n) / jnp.maximum(n, 1.0)
+    out_ref[...] = jnp.where(n >= 3, qcr, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("g_block", "interpret"))
+def qcr_score(quadrants, qbits, valid, *, g_block=128, interpret=False):
+    g, h = quadrants.shape
+    assert g % g_block == 0
+    grid = (g // g_block,)
+    return pl.pallas_call(
+        _qcr_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((g_block, h), lambda i: (i, 0))] * 3,
+        out_specs=pl.BlockSpec((g_block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((g,), jnp.float32),
+        interpret=interpret,
+    )(quadrants, qbits, valid)

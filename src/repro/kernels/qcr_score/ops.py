@@ -1,0 +1,18 @@
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.qcr_score.kernel import qcr_score
+from repro.kernels.qcr_score.ref import qcr_score_ref
+
+
+def score(quadrants, qbits, valid, *, use_kernel=None, interpret=None,
+          g_block=128):
+    on_tpu = jax.default_backend() == "tpu"
+    use_kernel = on_tpu if use_kernel is None else use_kernel
+    if not use_kernel:
+        return qcr_score_ref(quadrants, qbits, valid)
+    pad = (-quadrants.shape[0]) % g_block
+    pd = lambda x: jnp.pad(x, ((0, pad), (0, 0)))
+    out = qcr_score(pd(quadrants), pd(qbits), pd(valid), g_block=g_block,
+                    interpret=bool(interpret) and not on_tpu)
+    return out[: quadrants.shape[0]]

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for grouped QCR scoring."""
+import jax.numpy as jnp
+
+
+def qcr_score_ref(quadrants, qbits, valid):
+    """quadrants/qbits: [G, H] i8; valid: [G, H] bool.
+    QCR per group: |2*sum(quad==qbit) - n| / n  (0 when n < 3)."""
+    v = valid.astype(jnp.float32)
+    agree = ((quadrants == qbits) & valid).astype(jnp.float32)
+    n = jnp.sum(v, axis=1)
+    a = jnp.sum(agree, axis=1)
+    qcr = jnp.abs(2.0 * a - n) / jnp.maximum(n, 1.0)
+    return jnp.where(n >= 3, qcr, 0.0)

@@ -1,0 +1,42 @@
+"""Pallas TPU kernel: XASH superkey containment over 2xu32 lanes.
+
+Tiled elementwise bitwise AND + compare: each grid step streams a [T_blk,
+N_blk] tile through VMEM (the MC seeker's bloom pruning stage, MATE-style).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sk_kernel(sk_lo_ref, sk_hi_ref, q_lo_ref, q_hi_ref, out_ref):
+    sk_lo = sk_lo_ref[...]                    # [N_blk]
+    sk_hi = sk_hi_ref[...]
+    q_lo = q_lo_ref[...]                      # [T_blk]
+    q_hi = q_hi_ref[...]
+    lo_ok = (sk_lo[None, :] & q_lo[:, None]) == q_lo[:, None]
+    hi_ok = (sk_hi[None, :] & q_hi[:, None]) == q_hi[:, None]
+    out_ref[...] = lo_ok & hi_ok
+
+
+@functools.partial(jax.jit, static_argnames=("t_block", "n_block", "interpret"))
+def superkey_filter(sk_lo, sk_hi, q_lo, q_hi, *, t_block=8, n_block=1024,
+                    interpret=False):
+    n = sk_lo.shape[0]
+    t = q_lo.shape[0]
+    assert n % n_block == 0 and t % t_block == 0
+    grid = (t // t_block, n // n_block)
+    return pl.pallas_call(
+        _sk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_block,), lambda i, j: (j,)),
+            pl.BlockSpec((n_block,), lambda i, j: (j,)),
+            pl.BlockSpec((t_block,), lambda i, j: (i,)),
+            pl.BlockSpec((t_block,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((t_block, n_block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, n), jnp.bool_),
+        interpret=interpret,
+    )(sk_lo, sk_hi, q_lo, q_hi)

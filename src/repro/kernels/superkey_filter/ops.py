@@ -1,0 +1,22 @@
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.superkey_filter.kernel import superkey_filter
+from repro.kernels.superkey_filter.ref import superkey_filter_ref
+
+
+def filter_rows(sk_lo, sk_hi, q_lo, q_hi, *, use_kernel=None, interpret=None,
+                t_block=8, n_block=1024):
+    on_tpu = jax.default_backend() == "tpu"
+    use_kernel = on_tpu if use_kernel is None else use_kernel
+    if not use_kernel:
+        return superkey_filter_ref(sk_lo, sk_hi, q_lo, q_hi)
+    tp = (-q_lo.shape[0]) % t_block
+    npad = (-sk_lo.shape[0]) % n_block
+    out = superkey_filter(
+        jnp.pad(sk_lo, (0, npad)), jnp.pad(sk_hi, (0, npad)),
+        jnp.pad(q_lo, (0, tp), constant_values=jnp.uint32(0xFFFFFFFF)),
+        jnp.pad(q_hi, (0, tp), constant_values=jnp.uint32(0xFFFFFFFF)),
+        t_block=t_block, n_block=n_block,
+        interpret=bool(interpret) and not on_tpu)
+    return out[: q_lo.shape[0], : sk_lo.shape[0]]

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the XASH superkey bloom filter."""
+import jax.numpy as jnp
+
+
+def superkey_filter_ref(sk_lo, sk_hi, q_lo, q_hi):
+    """sk_lo/hi: [N] u32 row digests; q_lo/hi: [T] u32 query digests.
+    Returns [T, N] bool: (row & q) == q."""
+    lo_ok = (sk_lo[None, :] & q_lo[:, None]) == q_lo[:, None]
+    hi_ok = (sk_hi[None, :] & q_hi[:, None]) == q_hi[:, None]
+    return lo_ok & hi_ok

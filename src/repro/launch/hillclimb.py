@@ -1,0 +1,99 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# §Perf hillclimbing harness: re-lower a cell with a config override and
+# report the roofline-term deltas vs the recorded baseline.
+#
+#   PYTHONPATH=src python -m repro.launch.hillclimb --arch smollm-360m \
+#       --shape train_4k --set causal_block_skip=True --tag blockskip
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+from repro.configs import SHAPES, get_config
+from repro.launch import hlo_analysis
+from repro.launch.dryrun import (RESULTS_DIR, build_lowered, model_flops,
+                                 run_cell)
+from repro.launch.mesh import make_production_mesh
+
+PERF_DIR = RESULTS_DIR.parent / "perf"
+
+
+def parse_override(kv: str):
+    k, v = kv.split("=", 1)
+    for cast in (int, float):
+        try:
+            return k, cast(v)
+        except ValueError:
+            pass
+    if v in ("True", "False"):
+        return k, v == "True"
+    return k, v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", action="append", default=[])
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--multipod", action="store_true")
+    args = ap.parse_args()
+    PERF_DIR.mkdir(parents=True, exist_ok=True)
+
+    overrides = dict(parse_override(kv) for kv in args.set)
+    cfg = get_config(args.arch).replace(**overrides)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multipod)
+
+    t0 = time.time()
+    lowered, params_tree = build_lowered(cfg, shape, mesh)
+    compiled = lowered.compile()
+    text = compiled.as_text()
+    hlo = hlo_analysis.analyze(text)
+    terms = hlo_analysis.roofline_terms(hlo, chips=mesh.size)
+    mem = compiled.memory_analysis()
+    mflops = model_flops(cfg, shape, params_tree)
+
+    mesh_name = "pod2x16x16" if args.multipod else "pod16x16"
+    base_path = RESULTS_DIR / f"{args.arch}__{args.shape}__{mesh_name}.json"
+    base = json.loads(base_path.read_text()) if base_path.exists() else {}
+    rec = {
+        "arch": args.arch, "shape": args.shape, "mesh": mesh_name,
+        "tag": args.tag, "overrides": overrides,
+        "compile_s": round(time.time() - t0, 2),
+        "roofline": terms,
+        "peak_gb_per_device": (mem.argument_size_in_bytes +
+                               mem.output_size_in_bytes +
+                               mem.temp_size_in_bytes -
+                               mem.alias_size_in_bytes) / 1e9,
+        "hlo": {k: hlo[k] for k in ("flops", "collective_bytes", "hbm_bytes")},
+        "useful_flops_ratio": (mflops / mesh.size) / max(hlo["flops"], 1),
+    }
+    if base.get("roofline"):
+        rec["baseline"] = {
+            "roofline": base["roofline"],
+            "peak_gb_per_device":
+                base["memory"]["peak_bytes_per_device"] / 1e9,
+            "useful_flops_ratio": base["useful_flops_ratio"],
+        }
+        rec["delta"] = {
+            k: (terms[k] / base["roofline"][k] - 1.0)
+            if base["roofline"].get(k) else None
+            for k in ("compute_s", "memory_s", "collective_s")
+        }
+    out = PERF_DIR / f"{args.arch}__{args.shape}__{mesh_name}__{args.tag}.json"
+    out.write_text(json.dumps(rec, indent=2, default=str))
+    brief = {"tag": args.tag,
+             "terms": {k: round(terms[k], 4) for k in
+                       ("compute_s", "memory_s", "collective_s")},
+             "peak_gb": round(rec["peak_gb_per_device"], 2),
+             "useful_ratio": round(rec["useful_flops_ratio"], 4),
+             "delta_vs_baseline": rec.get("delta")}
+    print(json.dumps(brief, indent=2))
+
+
+if __name__ == "__main__":
+    main()

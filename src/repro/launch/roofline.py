@@ -1,0 +1,130 @@
+"""Aggregate dry-run JSONs into the §Dry-run / §Roofline markdown tables.
+
+    PYTHONPATH=src python -m repro.launch.roofline > benchmarks/results/roofline.md
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+
+def load_all():
+    recs = []
+    for f in sorted(RESULTS.glob("*.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def dominant_short(d):
+    return {"compute_s": "compute", "memory_s": "memory",
+            "collective_s": "collective"}.get(d, d or "-")
+
+
+def emit_tables(recs, multi_pod_mesh="pod2x16x16"):
+    lines = []
+    lines.append("### Dry-run matrix (status x mesh)\n")
+    lines.append("| arch | shape | 16x16 | 2x16x16 | peak GB/dev (1 pod) | compile s |")
+    lines.append("|---|---|---|---|---|---|")
+    by_key = {}
+    for r in recs:
+        if r.get("arch") == "blend-discovery":
+            continue
+        by_key[(r["arch"], r["shape"], r["mesh"])] = r
+    seen = sorted({(a, s) for a, s, _ in by_key})
+    for a, s in seen:
+        r1 = by_key.get((a, s, "pod16x16"), {})
+        r2 = by_key.get((a, s, multi_pod_mesh), {})
+        peak = r1.get("memory", {}).get("peak_bytes_per_device")
+        lines.append(
+            f"| {a} | {s} | {r1.get('status','-')} | {r2.get('status','-')} | "
+            f"{'' if peak is None else f'{peak/1e9:.1f}'} | "
+            f"{r1.get('compile_s','-')} |")
+
+    lines.append("\n### Roofline (single pod, 256 chips, per step)\n")
+    lines.append("| arch | shape | compute | memory | collective | dominant | "
+                 "useful FLOP ratio | MODEL_FLOPS/chip |")
+    lines.append("|---|---|---|---|---|---|---|---|")
+    for a, s in seen:
+        r = by_key.get((a, s, "pod16x16"), {})
+        if r.get("status") != "ok":
+            lines.append(f"| {a} | {s} | - | - | - | skipped | - | - |")
+            continue
+        t = r["roofline"]
+        lines.append(
+            f"| {a} | {s} | {fmt_s(t['compute_s'])} | {fmt_s(t['memory_s'])} | "
+            f"{fmt_s(t['collective_s'])} | {dominant_short(r['dominant_term'])} | "
+            f"{r['useful_flops_ratio']:.3f} | "
+            f"{r['model_flops_per_chip']/1e12:.2f}T |")
+
+    # blend-discovery cells
+    lines.append("\n### blend-discovery (Gittables-scale index)\n")
+    lines.append("| mesh | seeker | compile s | GB/dev | memory term | collective term |")
+    lines.append("|---|---|---|---|---|---|")
+    for r in recs:
+        if r.get("arch") != "blend-discovery":
+            continue
+        for name, v in r.get("seekers", {}).items():
+            t = v["roofline"]
+            lines.append(f"| {r['mesh']} | {name} | {v['compile_s']} | "
+                         f"{v['memory_gb_per_device']} | "
+                         f"{fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} |")
+    return "\n".join(lines)
+
+
+def summary_stats(recs):
+    ok = [r for r in recs if r.get("status") == "ok" and
+          r.get("arch") != "blend-discovery"]
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    fits = [r for r in ok if r["memory"]["peak_bytes_per_device"] <= 16e9]
+    return {"ok": len(ok), "skipped": len(skipped),
+            "fits_16gb": len(fits),
+            "over_16gb": sorted({(r['arch'], r['shape'])
+                                 for r in ok
+                                 if r['memory']['peak_bytes_per_device'] > 16e9})}
+
+
+def emit_baseline_comparison():
+    base_dir = RESULTS.parent / "dryrun_baseline"
+    if not base_dir.exists():
+        return ""
+    lines = ["\n### Baseline (paper-faithful) vs optimized defaults "
+             "(single pod, train cells)\n",
+             "| arch | shape | memory term base -> opt | collective base -> "
+             "opt | useful ratio base -> opt |",
+             "|---|---|---|---|---|"]
+    for f in sorted(RESULTS.glob("*pod16x16.json")):
+        opt = json.loads(f.read_text())
+        bf = base_dir / f.name
+        if opt.get("status") != "ok" or not bf.exists():
+            continue
+        base = json.loads(bf.read_text())
+        if base.get("status") != "ok" or "roofline" not in base:
+            continue
+        bo, oo = base["roofline"], opt["roofline"]
+        lines.append(
+            f"| {opt['arch']} | {opt['shape']} | "
+            f"{fmt_s(bo['memory_s'])} -> {fmt_s(oo['memory_s'])} | "
+            f"{fmt_s(bo['collective_s'])} -> {fmt_s(oo['collective_s'])} | "
+            f"{base['useful_flops_ratio']:.3f} -> "
+            f"{opt['useful_flops_ratio']:.3f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    recs = load_all()
+    print(emit_tables(recs))
+    print(emit_baseline_comparison())
+    print("\n### Summary\n")
+    print(json.dumps(summary_stats(recs), indent=2, default=str))

@@ -1,0 +1,12 @@
+from repro.models.registry import (  # noqa: F401
+    cache_specs,
+    decode_fn,
+    init_cache,
+    init_params,
+    input_specs,
+    is_encdec,
+    loss_fn,
+    make_batch,
+    param_specs_tree,
+    prefill_fn,
+)

@@ -1,0 +1,294 @@
+"""GQA attention: chunked (flash-style) training/prefill path + decode path.
+
+The training path is a pure-JAX blockwise online-softmax (lax.scan over query
+and key/value chunks) so it compiles on any backend and never materializes the
+[S, S] score matrix.  On TPU the Pallas kernel in
+``repro.kernels.flash_attention`` is a drop-in for the inner computation; the
+dry-run lowers the pure-JAX path (Pallas does not lower on the CPU backend).
+
+Baseline causality is mask-based (fully-masked kv blocks are still computed:
+exact static FLOPs, ~2x causal waste — visible in the roofline useful-compute
+ratio).  ``causal_block_skip=True`` switches to a triangular pair schedule
+that only visits j <= i blocks (hillclimb lever, see EXPERIMENTS §Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ambient_mesh, maybe_constrain
+from repro.models.layers import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+def _heads_factorizable(K: int, G: int) -> bool:
+    """Can GSPMD split the model axis across the (kv-head, group) dims?"""
+    mesh = ambient_mesh()
+    if mesh is None:
+        return True
+    ms = mesh.shape.get("model", 1)
+    for a in range(1, ms + 1):
+        if ms % a == 0 and K % a == 0 and G % (ms // a) == 0:
+            return True
+    return False
+
+
+def _constrain_blocks(qb, mesh_axis_ok: bool):
+    """For non-factorizable head counts (e.g. 56 or 15 heads on a 16-way
+    axis), shard the query-chunk dim instead — context-parallel attention:
+    online softmax is row-local, so no cross-shard reductions appear."""
+    if mesh_axis_ok:
+        return qb
+    # qb: [nq, B, K, G, Tq, D] — shard Tq
+    return maybe_constrain(qb, None, "batch", None, None, "model", None)
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv: int, head_dim: int, dtype):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d_model, n_heads * head_dim, dtype),
+        "wk": dense_init(ks[1], d_model, n_kv * head_dim, dtype),
+        "wv": dense_init(ks[2], d_model, n_kv * head_dim, dtype),
+        "wo": dense_init(ks[3], n_heads * head_dim, d_model, dtype),
+    }
+
+
+def _qkv(params, x, n_heads, n_kv, head_dim, positions, rope_theta):
+    """Megatron-style column-parallel projections: the flattened head dim is
+    constrained to the model axis so attention runs head-local (no in-loop
+    resharding); the seq-sharded residual is all-gathered once per layer."""
+    B, S, _ = x.shape
+    q = maybe_constrain(x @ params["wq"], "batch", None, "model")
+    k = maybe_constrain(x @ params["wk"], "batch", None, "model")
+    v = maybe_constrain(x @ params["wv"], "batch", None, "model")
+    q = q.reshape(B, S, n_heads, head_dim)
+    k = k.reshape(B, S, n_kv, head_dim)
+    v = v.reshape(B, S, n_kv, head_dim)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def chunked_attention(q, k, v, *, q_chunk: int, kv_chunk: int, causal: bool,
+                      q_offset=0, kv_lens=None, block_skip: bool = False):
+    """Online-softmax blockwise attention.
+
+    q: [B, Sq, H, D]; k/v: [B, Skv, K, D] with H = K*G (GQA).
+    q_offset: global position of q[0] (prefill continuation / decode).
+    kv_lens: optional [B] valid kv lengths (padding mask).
+    Returns [B, Sq, H, D].
+    """
+    B, Sq, H, D = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    G = H // K
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    nq, nk = Sq // q_chunk, Skv // kv_chunk
+    assert nq * q_chunk == Sq and nk * kv_chunk == Skv, "seq must divide chunks"
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+
+    qb = q.reshape(B, nq, q_chunk, K, G, D).transpose(1, 0, 3, 4, 2, 5)  # [nq,B,K,G,Tq,D]
+    kb = k.reshape(B, nk, kv_chunk, K, D).transpose(1, 0, 3, 2, 4)       # [nk,B,K,Tk,D]
+    vb = v.reshape(B, nk, kv_chunk, K, D).transpose(1, 0, 3, 2, 4)
+    qb = _constrain_blocks(qb, _heads_factorizable(K, G))
+
+    cp = not _heads_factorizable(K, G)
+    if block_skip and causal:
+        out = _triangular_attention(qb, kb, vb, scale, q_chunk, kv_chunk,
+                                    q_offset, kv_lens, cp)
+    else:
+        out = _rect_attention(qb, kb, vb, scale, q_chunk, kv_chunk, causal,
+                              q_offset, kv_lens, cp)
+    # out: [nq, B, K, G, Tq, D] -> [B, Sq, H, D]
+    return out.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, H, D)
+
+
+def _block(q_blk, k_blk, v_blk, m, l, acc, qi, kj, scale, q_chunk, kv_chunk,
+           causal, q_offset, kv_lens, cp=False):
+    """One online-softmax update.  q_blk [B,K,G,Tq,D]; k/v [B,K,Tk,D].
+
+    cp=True pins the query-chunk dim to the model axis (context-parallel) —
+    applied inside the block so the checkpointed backward recompute carries
+    the same sharding (constraints transpose to themselves)."""
+    def pin(x):
+        if not cp:
+            return x
+        spec = [("batch" if i == 0 else "model" if i == 3 else None)
+                for i in range(x.ndim)]
+        return maybe_constrain(x, *spec)
+
+    q_blk, m, l, acc = pin(q_blk), pin(m), pin(l), pin(acc)
+    # NOTE §Perf: bf16-operand dots with preferred_element_type=f32 were
+    # tried and measured NEUTRAL-to-worse (+0.7% memory term) in this
+    # lowering — the f32 tile converts below fuse into the dot's operand
+    # reads, so removing them buys nothing here (they would on the MXU; the
+    # Pallas kernel takes bf16 operands directly).
+    s = jnp.einsum("bkgqd,bktd->bkgqt", q_blk.astype(jnp.float32),
+                   k_blk.astype(jnp.float32)) * scale
+    s = pin(s)
+    qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+    kpos = kj * kv_chunk + jnp.arange(kv_chunk)
+    mask = jnp.ones((q_chunk, kv_chunk), bool)
+    if causal:
+        mask = qpos[:, None] >= kpos[None, :]
+    if kv_lens is not None:
+        mask = mask[None] & (kpos[None, None, :] < kv_lens[:, None, None])
+        mask = mask[:, None, None]          # [B,1,1,Tq,Tk]
+    else:
+        mask = mask[None, None, None]       # [1,1,1,Tq,Tk]
+    s = jnp.where(mask, s, NEG_INF)
+    m_new = pin(jnp.maximum(m, jnp.max(s, axis=-1)))
+    p = pin(jnp.exp(s - m_new[..., None]))
+    corr = jnp.exp(m - m_new)
+    l_new = pin(l * corr + jnp.sum(p, axis=-1))
+    # NOTE §Perf: casting p to bf16 for the pv matmul was tried and REFUTED —
+    # the cast materializes an extra copy of p in the measured lowering
+    # (memory term +3.5%).
+    acc_new = pin(acc * corr[..., None] + jnp.einsum(
+        "bkgqt,bktd->bkgqd", p, v_blk.astype(jnp.float32)))
+    return m_new, l_new, acc_new
+
+
+def _finish(m, l, acc, dtype):
+    l = jnp.where(l == 0.0, 1.0, l)
+    return (acc / l[..., None]).astype(dtype)
+
+
+def _rect_attention(qb, kb, vb, scale, q_chunk, kv_chunk, causal, q_offset,
+                    kv_lens, cp=False):
+    nq, B, K, G, Tq, D = qb.shape
+    nk = kb.shape[0]
+
+    def per_q(qi, q_blk):
+        m = jnp.full((B, K, G, Tq), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, K, G, Tq), jnp.float32)
+        acc = jnp.zeros((B, K, G, Tq, D), jnp.float32)
+
+        def kv_step(carry, inp):
+            kj, k_blk, v_blk = inp
+            m, l, acc = carry
+            m, l, acc = _block(q_blk, k_blk, v_blk, m, l, acc, qi, kj, scale,
+                               q_chunk, kv_chunk, causal, q_offset, kv_lens, cp)
+            return (m, l, acc), None
+
+        # remat: recompute scores/probs/mask in bwd instead of saving the
+        # [B,K,G,Tq,Tk] residuals per block (flash-attention-style backward)
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(kv_step), (m, l, acc),
+                                      (jnp.arange(nk), kb, vb))
+        return _finish(m, l, acc, qb.dtype)
+
+    def q_step(_, inp):
+        qi, q_blk = inp
+        return None, per_q(qi, q_blk)
+
+    _, out = jax.lax.scan(jax.checkpoint(q_step), None, (jnp.arange(nq), qb))
+    return out
+
+
+def _triangular_attention(qb, kb, vb, scale, q_chunk, kv_chunk, q_offset,
+                          kv_lens, cp=False):
+    """Causal-only schedule visiting exactly the j <= i block pairs.
+
+    Static pair list of length nq*(nq+1)/2 (requires q_chunk == kv_chunk),
+    grouped by q block so the online-softmax updates stay ordered; state for
+    every q block is carried in dense buffers updated via dynamic_update_slice.
+    ~Halves attention FLOPs vs the rectangular schedule.
+    """
+    nq, B, K, G, Tq, D = qb.shape
+    nk = kb.shape[0]
+    assert nq == nk and q_chunk == kv_chunk, "block_skip needs equal chunks"
+    pairs = [(i, j) for i in range(nq) for j in range(i + 1)]
+    pi = jnp.array([p[0] for p in pairs], jnp.int32)
+    pj = jnp.array([p[1] for p in pairs], jnp.int32)
+
+    m0 = jnp.full((nq, B, K, G, Tq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((nq, B, K, G, Tq), jnp.float32)
+    a0 = jnp.zeros((nq, B, K, G, Tq, D), jnp.float32)
+
+    def step(carry, ij):
+        m_all, l_all, a_all = carry
+        i, j = ij
+        q_blk = jax.lax.dynamic_index_in_dim(qb, i, 0, keepdims=False)
+        k_blk = jax.lax.dynamic_index_in_dim(kb, j, 0, keepdims=False)
+        v_blk = jax.lax.dynamic_index_in_dim(vb, j, 0, keepdims=False)
+        m = jax.lax.dynamic_index_in_dim(m_all, i, 0, keepdims=False)
+        l = jax.lax.dynamic_index_in_dim(l_all, i, 0, keepdims=False)
+        acc = jax.lax.dynamic_index_in_dim(a_all, i, 0, keepdims=False)
+        m, l, acc = _block(q_blk, k_blk, v_blk, m, l, acc, i, j, scale,
+                           q_chunk, kv_chunk, True, q_offset, kv_lens, cp)
+        m_all = jax.lax.dynamic_update_index_in_dim(m_all, m, i, 0)
+        l_all = jax.lax.dynamic_update_index_in_dim(l_all, l, i, 0)
+        a_all = jax.lax.dynamic_update_index_in_dim(a_all, acc, i, 0)
+        return (m_all, l_all, a_all), None
+
+    (m_all, l_all, a_all), _ = jax.lax.scan(jax.checkpoint(step), (m0, l0, a0),
+                                            (pi, pj))
+    return _finish(m_all, l_all, a_all, qb.dtype)
+
+
+def attention_train(params, x, *, n_heads, n_kv, head_dim, rope_theta,
+                    q_chunk, kv_chunk, causal=True, block_skip=False):
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _qkv(params, x, n_heads, n_kv, head_dim, positions, rope_theta)
+    out = chunked_attention(q, k, v, q_chunk=q_chunk, kv_chunk=kv_chunk,
+                            causal=causal, block_skip=block_skip)
+    return out.reshape(B, S, n_heads * head_dim) @ params["wo"]
+
+
+def attention_prefill(params, x, *, n_heads, n_kv, head_dim, rope_theta,
+                      q_chunk, kv_chunk, block_skip=False):
+    """Like train but also returns the (k, v) cache contents."""
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _qkv(params, x, n_heads, n_kv, head_dim, positions, rope_theta)
+    out = chunked_attention(q, k, v, q_chunk=q_chunk, kv_chunk=kv_chunk,
+                            causal=True, block_skip=block_skip)
+    return out.reshape(B, S, n_heads * head_dim) @ params["wo"], (k, v)
+
+
+def decode_qkv(params, x_t, pos, *, n_heads, n_kv, head_dim, rope_theta):
+    """Single-token q/k/v for decode.  x_t: [B, D]; pos: [B]."""
+    B = x_t.shape[0]
+    q = (x_t @ params["wq"]).reshape(B, 1, n_heads, head_dim)
+    k = (x_t @ params["wk"]).reshape(B, 1, n_kv, head_dim)
+    v = (x_t @ params["wv"]).reshape(B, 1, n_kv, head_dim)
+    q = apply_rope(q, pos[:, None], rope_theta)
+    k = apply_rope(k, pos[:, None], rope_theta)
+    return q, k, v
+
+
+def decode_scores(params, q, cache_k, cache_v, pos, *, n_heads, n_kv,
+                  head_dim, dtype):
+    """Attention read over a (layer-sliced) cache.  q: [B,1,H,D];
+    cache_k/v: [B,T,K,D] with the CURRENT token already written."""
+    B, T = cache_k.shape[0], cache_k.shape[1]
+    K = n_kv
+    G = n_heads // K
+    qg = q.reshape(B, K, G, head_dim)
+    # accumulate in f32 WITHOUT materializing an f32 copy of the cache
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, cache_k,
+                   preferred_element_type=jnp.float32) / jnp.sqrt(head_dim)
+    valid = jnp.arange(T)[None, :] <= pos[:, None]            # [B, T]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", p.astype(cache_v.dtype), cache_v,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, n_heads * head_dim).astype(dtype)
+    return o @ params["wo"]
+
+
+def attention_decode(params, x_t, cache_k, cache_v, pos, *, n_heads, n_kv,
+                     head_dim, rope_theta):
+    """One decode step over a per-layer cache (compat path; the lm decode
+    loop uses decode_qkv/decode_scores with full-stack in-place updates)."""
+    q, k, v = decode_qkv(params, x_t, pos, n_heads=n_heads, n_kv=n_kv,
+                         head_dim=head_dim, rope_theta=rope_theta)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                           (0, pos[0], 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                           (0, pos[0], 0, 0))
+    out = decode_scores(params, q, cache_k, cache_v, pos, n_heads=n_heads,
+                        n_kv=n_kv, head_dim=head_dim, dtype=x_t.dtype)
+    return out, cache_k, cache_v

@@ -1,0 +1,211 @@
+"""Encoder-decoder backbone (seamless-m4t style).
+
+The speech frontend is a stub: the encoder consumes precomputed frame
+embeddings [B, S_enc, d_model] (S_enc = seq_len // enc_ratio).  The decoder is
+a causal transformer with cross-attention over the encoder output; decode
+shapes lower the *decoder* step (cross K/V precomputed into the cache).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import maybe_constrain
+from repro.models import attention as attn
+from repro.models.layers import apply_norm, dense_init, embed_init, norm_param
+from repro.models.lm import chunked_ce_loss, init_mlp, mlp_apply
+
+
+def _init_enc_layer(cfg, key):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": norm_param(cfg.d_model, cfg.norm_type, dtype),
+        "norm2": norm_param(cfg.d_model, cfg.norm_type, dtype),
+        "attn": attn.init_attention(ks[0], cfg.d_model, cfg.n_heads,
+                                    cfg.n_kv_heads, cfg.head_dim, dtype),
+        "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _init_dec_layer(cfg, key):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "norm1": norm_param(cfg.d_model, cfg.norm_type, dtype),
+        "norm2": norm_param(cfg.d_model, cfg.norm_type, dtype),
+        "norm3": norm_param(cfg.d_model, cfg.norm_type, dtype),
+        "attn": attn.init_attention(ks[0], cfg.d_model, cfg.n_heads,
+                                    cfg.n_kv_heads, cfg.head_dim, dtype),
+        "xattn": attn.init_attention(ks[1], cfg.d_model, cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.head_dim, dtype),
+        "mlp": init_mlp(ks[2], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_encdec(cfg, key):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ks[0], cfg.n_enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "tok_embed": embed_init(ks[2], cfg.vocab_padded, cfg.d_model, dtype),
+        "enc": {"layers": jax.vmap(functools.partial(_init_enc_layer, cfg))(enc_keys),
+                "final_norm": norm_param(cfg.d_model, cfg.norm_type, dtype)},
+        "layers": jax.vmap(functools.partial(_init_dec_layer, cfg))(dec_keys),
+        "final_norm": norm_param(cfg.d_model, cfg.norm_type, dtype),
+        "lm_head": dense_init(ks[3], cfg.d_model, cfg.vocab_padded, dtype),
+    }
+
+
+def _attn_kw(cfg, causal):
+    return dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                rope_theta=cfg.rope_theta, q_chunk=cfg.q_chunk,
+                kv_chunk=cfg.kv_chunk, causal=causal)
+
+
+def encode(params, cfg, frames):
+    """frames: [B, S_enc, D] stub embeddings -> encoder hidden states."""
+    def body(x, lp):
+        x = maybe_constrain(x, "batch", "seq", None)
+        h = apply_norm(x, lp["norm1"], cfg.norm_type)
+        x = x + attn.attention_train(lp["attn"], h, **_attn_kw(cfg, causal=False))
+        h = apply_norm(x, lp["norm2"], cfg.norm_type)
+        return x + mlp_apply(lp["mlp"], h), None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body, frames, params["enc"]["layers"])
+    return apply_norm(x, params["enc"]["final_norm"], cfg.norm_type)
+
+
+def _cross_attention(lp, h, enc_kv):
+    """h: [B,S,D] queries; enc_kv = (k, v) [B,Se,K,hd] precomputed."""
+    B, S, _ = h.shape
+    n_heads = lp["wq"].shape[1] // enc_kv[0].shape[-1]
+    hd = enc_kv[0].shape[-1]
+    q = (h @ lp["wq"]).reshape(B, S, n_heads, hd)
+    out = attn.chunked_attention(q, enc_kv[0], enc_kv[1], q_chunk=min(1024, S),
+                                 kv_chunk=min(1024, enc_kv[0].shape[1]),
+                                 causal=False)
+    return out.reshape(B, S, n_heads * hd) @ lp["wo"]
+
+
+def _enc_kv(lp, enc_out, n_kv, head_dim):
+    B, Se, _ = enc_out.shape
+    k = (enc_out @ lp["wk"]).reshape(B, Se, n_kv, head_dim)
+    v = (enc_out @ lp["wv"]).reshape(B, Se, n_kv, head_dim)
+    return k, v
+
+
+def decode_train(params, cfg, tokens, enc_out, collect_caches=False):
+    x = params["tok_embed"][tokens]
+
+    def body(x, lp):
+        x = maybe_constrain(x, "batch", "seq", None)
+        h = apply_norm(x, lp["norm1"], cfg.norm_type)
+        kw = _attn_kw(cfg, causal=True)
+        if collect_caches:
+            kw.pop("causal")
+            a, kv = attn.attention_prefill(lp["attn"], h, **kw)
+        else:
+            a, kv = attn.attention_train(lp["attn"], h, **kw), None
+        x = x + a
+        h = apply_norm(x, lp["norm2"], cfg.norm_type)
+        ek, ev = _enc_kv(lp["xattn"], enc_out, cfg.n_kv_heads, cfg.head_dim)
+        x = x + _cross_attention(lp["xattn"], h, (ek, ev))
+        h = apply_norm(x, lp["norm3"], cfg.norm_type)
+        x = x + mlp_apply(lp["mlp"], h)
+        caches = (kv, (ek, ev)) if collect_caches else None
+        return x, caches
+
+    if not collect_caches and cfg.remat:
+        body = jax.checkpoint(body)
+    x, caches = jax.lax.scan(body, x, params["layers"])
+    return x, caches
+
+
+def encdec_loss(params, cfg, batch):
+    tokens = batch["tokens"]
+    enc_out = encode(params, cfg, batch["frames"])
+    hidden, _ = decode_train(params, cfg, tokens, enc_out)
+    hidden = apply_norm(hidden, params["final_norm"], cfg.norm_type)
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.ones_like(tokens, jnp.float32).at[:, -1].set(0.0)
+    # chunked_ce_loss applies final_norm again via logits_fn; pass a params
+    # view with an identity final_norm to avoid double-normalizing.
+    loss = chunked_ce_loss(_head_view(params, cfg), cfg, hidden, labels, mask)
+    return loss, {}
+
+
+def _head_view(params, cfg):
+    return {"final_norm": jnp.zeros_like(params["final_norm"]),
+            "lm_head": params["lm_head"], "tok_embed": params["tok_embed"]}
+
+
+def init_cache(cfg, batch: int, max_len: int, enc_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    L, K, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    kv = jnp.zeros((L, batch, max_len, K, hd), dtype)
+    ekv = jnp.zeros((L, batch, enc_len, K, hd), dtype)
+    return {"k": kv, "v": kv, "ek": ekv, "ev": ekv,
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, cfg, tokens, frames, max_len: int):
+    """Encoder pass + decoder prefill; returns (cache, last logits)."""
+    enc_out = encode(params, cfg, frames)
+    hidden, caches = decode_train(params, cfg, tokens, enc_out,
+                                  collect_caches=True)
+    (ks, vs), (eks, evs) = caches
+    S = tokens.shape[1]
+    pad = max_len - S
+    ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    hidden = apply_norm(hidden, params["final_norm"], cfg.norm_type)
+    w = params["lm_head"]
+    last = (hidden[:, -1, :] @ w)
+    cache = {"k": ks, "v": vs, "ek": eks, "ev": evs,
+             "pos": jnp.asarray(S, jnp.int32)}
+    return cache, last
+
+
+def decode_step(params, cfg, cache, token):
+    """One decoder step with cross-attention over the cached encoder K/V."""
+    pos = cache["pos"]
+    x = params["tok_embed"][token]
+    B = x.shape[0]
+    posv = jnp.full((B,), pos, jnp.int32)
+    akw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+               rope_theta=cfg.rope_theta)
+
+    def body(carry, inp):
+        x, k_all, v_all = carry
+        lp, ek, ev, idx = inp
+        h = apply_norm(x, lp["norm1"], cfg.norm_type)
+        q, k, v = attn.decode_qkv(lp["attn"], h, posv, **akw)
+        k_all = jax.lax.dynamic_update_slice(
+            k_all, k[None].astype(k_all.dtype), (idx, 0, pos, 0, 0))
+        v_all = jax.lax.dynamic_update_slice(
+            v_all, v[None].astype(v_all.dtype), (idx, 0, pos, 0, 0))
+        ck = jax.lax.dynamic_index_in_dim(k_all, idx, 0, keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(v_all, idx, 0, keepdims=False)
+        a = attn.decode_scores(lp["attn"], q, ck, cv, posv, n_heads=cfg.n_heads,
+                               n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                               dtype=h.dtype)
+        x = x + a
+        h = apply_norm(x, lp["norm2"], cfg.norm_type)
+        x = x + _cross_attention(lp["xattn"], h[:, None, :], (ek, ev))[:, 0]
+        h = apply_norm(x, lp["norm3"], cfg.norm_type)
+        x = x + mlp_apply(lp["mlp"], h)
+        return (x, k_all, v_all), None
+
+    (x, k_new, v_new), _ = jax.lax.scan(
+        body, (x, cache["k"], cache["v"]),
+        (params["layers"], cache["ek"], cache["ev"],
+         jnp.arange(cfg.n_layers)))
+    x = apply_norm(x, params["final_norm"], cfg.norm_type)
+    logits = x @ params["lm_head"]
+    new_cache = dict(cache, k=k_new, v=v_new, pos=pos + 1)
+    return new_cache, logits

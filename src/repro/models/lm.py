@@ -1,0 +1,453 @@
+"""Decoder-only LM covering the dense / moe / ssm / hybrid / vlm families.
+
+Layer stacks are parameter-stacked and executed with ``lax.scan`` (small HLO,
+fast 512-device SPMD compiles); blocks are rematerialized in the backward
+pass.  The vocabulary is padded to a multiple of 128 for clean TP sharding.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import maybe_constrain
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import apply_norm, dense_init, embed_init, norm_param, swiglu
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d_model, d_ff, dtype),
+        "w_up": dense_init(ks[1], d_model, d_ff, dtype),
+        "w_down": dense_init(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def mlp_apply(params, x):
+    return swiglu(x @ params["w_gate"], x @ params["w_up"]) @ params["w_down"]
+
+
+def _init_layer(cfg, key):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    p = {"norm1": norm_param(cfg.d_model, cfg.norm_type, dtype),
+         "norm2": norm_param(cfg.d_model, cfg.norm_type, dtype)}
+    if cfg.family in ("dense", "vlm", "moe"):
+        p["attn"] = attn.init_attention(ks[0], cfg.d_model, cfg.n_heads,
+                                        cfg.n_kv_heads, cfg.head_dim, dtype)
+        if cfg.family == "moe":
+            p["moe"] = moe_mod.init_moe(ks[1], cfg.d_model, cfg.n_experts,
+                                        cfg.d_expert, dtype)
+            if cfg.dense_residual:
+                p["mlp"] = init_mlp(ks[2], cfg.d_model, cfg.d_ff, dtype)
+            if cfg.n_shared_experts:
+                p["shared_mlp"] = init_mlp(
+                    ks[3], cfg.d_model, cfg.n_shared_experts * cfg.d_expert, dtype)
+        else:
+            p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    elif cfg.family == "ssm":
+        p["mlstm"] = ssm_mod.init_mlstm(ks[0], cfg)
+    elif cfg.family == "hybrid":
+        p["mamba"] = ssm_mod.init_mamba2(ks[0], cfg)
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+def init_lm(cfg, key):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    params = {
+        "tok_embed": embed_init(ks[1], cfg.vocab_padded, cfg.d_model, dtype),
+        "layers": jax.vmap(functools.partial(_init_layer, cfg))(layer_keys),
+        "final_norm": norm_param(cfg.d_model, cfg.norm_type, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[2], cfg.d_model, cfg.vocab_padded, dtype)
+    if cfg.family == "hybrid":  # zamba-style shared attention + mlp block
+        params["shared_attn"] = attn.init_attention(
+            ks[3], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, dtype)
+        params["shared_attn_norm"] = norm_param(cfg.d_model, cfg.norm_type, dtype)
+        params["shared_mlp"] = init_mlp(ks[4], cfg.d_model, cfg.d_ff, dtype)
+        params["shared_mlp_norm"] = norm_param(cfg.d_model, cfg.norm_type, dtype)
+    return params
+
+
+# --------------------------------------------------------------------------
+# blocks (train / full-sequence path)
+# --------------------------------------------------------------------------
+
+def _attn_block_train(lp, x, cfg, collect_kv=False):
+    h = apply_norm(x, lp["norm1"], cfg.norm_type)
+    kw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+              rope_theta=cfg.rope_theta, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+              block_skip=cfg.causal_block_skip)
+    if collect_kv:
+        a, kv = attn.attention_prefill(lp["attn"], h, **kw)
+    else:
+        a, kv = attn.attention_train(lp["attn"], h, **kw), None
+    x = x + a
+    h = apply_norm(x, lp["norm2"], cfg.norm_type)
+    aux = {}
+    if cfg.family == "moe":
+        B, S, D = h.shape
+        y, aux = moe_mod.moe_apply(lp["moe"], h.reshape(B * S, D),
+                                   n_experts=cfg.n_experts, top_k=cfg.top_k,
+                                   capacity_factor=cfg.capacity_factor,
+                                   group_size=cfg.moe_group_size,
+                                   impl=cfg.moe_impl,
+                                   expert_axis="data" if cfg.expert_data_shard
+                                   else "model")
+        y = y.reshape(B, S, D)
+        if cfg.dense_residual:
+            y = y + mlp_apply(lp["mlp"], h)
+        if cfg.n_shared_experts:
+            y = y + mlp_apply(lp["shared_mlp"], h)
+    else:
+        y = mlp_apply(lp["mlp"], h)
+    return x + y, aux, kv
+
+
+def _shared_block_train(params, x, cfg, collect_kv=False):
+    h = apply_norm(x, params["shared_attn_norm"], cfg.norm_type)
+    kw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+              rope_theta=cfg.rope_theta, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+              block_skip=cfg.causal_block_skip)
+    if collect_kv:
+        a, kv = attn.attention_prefill(params["shared_attn"], h, **kw)
+    else:
+        a, kv = attn.attention_train(params["shared_attn"], h, **kw), None
+    x = x + a
+    h = apply_norm(x, params["shared_mlp_norm"], cfg.norm_type)
+    return x + mlp_apply(params["shared_mlp"], h), kv
+
+
+def _zeros_like_aux(cfg):
+    if cfg.family == "moe":
+        return {"load_balance_loss": jnp.zeros((), jnp.float32),
+                "dropped_fraction": jnp.zeros((), jnp.float32)}
+    return {}
+
+
+def forward_hidden(params, cfg, x, collect_caches=False):
+    """Run the layer stack on embedded input x [B,S,D].
+
+    Returns (hidden, aux_mean, caches) where caches is a pytree of per-layer
+    prefill caches (stacked along the leading layer axis) when requested.
+    """
+    B, S, D = x.shape
+    is_hybrid = cfg.family == "hybrid"
+
+    def body(x, inp):
+        lp, idx = inp
+        # sequence-parallel residual stream: the saved per-layer carries are
+        # sharded over the model axis, bounding activation memory at long seq
+        x = maybe_constrain(x, "batch", "seq", None)
+        if cfg.family == "ssm":
+            h = apply_norm(x, lp["norm1"], cfg.norm_type)
+            x = x + ssm_mod.mlstm_train(lp["mlstm"], h, cfg)
+            return x, ({}, None)
+        if is_hybrid:
+            x = x + ssm_mod.mamba2_train(lp["mamba"], apply_norm(
+                x, lp["norm1"], cfg.norm_type), cfg)
+            is_attn = (idx % cfg.attn_every) == 0
+
+            def with_attn(x):
+                y, _ = _shared_block_train(params, x, cfg)
+                return y
+
+            x = jax.lax.cond(is_attn, with_attn, lambda x: x, x)
+            return x, ({}, None)
+        x, aux, kv = _attn_block_train(lp, x, cfg, collect_kv=collect_caches)
+        return x, (aux, kv)
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    xs = (params["layers"], jnp.arange(cfg.n_layers))
+    x, (aux, caches) = jax.lax.scan(body_fn, x, xs)
+    aux = {k: jnp.mean(v) for k, v in aux.items()} if aux else _zeros_like_aux(cfg)
+    return x, aux, caches
+
+
+def embed_tokens(params, cfg, tokens, patch_embeds=None):
+    x = params["tok_embed"][tokens]
+    if cfg.family == "vlm" and patch_embeds is not None:
+        P = cfg.n_patches
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x[:, P:, :]], axis=1)
+    return x
+
+
+def logits_fn(params, cfg, hidden):
+    h = apply_norm(hidden, params["final_norm"], cfg.norm_type)
+    w = params["tok_embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return h @ w
+
+
+def chunked_ce_loss(params, cfg, hidden, labels, mask, chunk: int = 512):
+    """Cross-entropy over the (padded) vocab, scanned over sequence chunks so
+    the [B, S, V] logits tensor never fully materializes."""
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    n = S // chunk
+    rem = S - n * chunk
+
+    def one(h_blk, y_blk, m_blk):
+        logits = logits_fn(params, cfg, h_blk).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y_blk[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * m_blk), jnp.sum(m_blk)
+
+    one = jax.checkpoint(one)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        h_blk, y_blk, m_blk = inp
+        s, c = one(h_blk, y_blk, m_blk)
+        return (tot + s, cnt + c), None
+
+    hs = hidden[:, :n * chunk].reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    ys = labels[:, :n * chunk].reshape(B, n, chunk).transpose(1, 0, 2)
+    ms = mask[:, :n * chunk].reshape(B, n, chunk).transpose(1, 0, 2)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (hs, ys, ms))
+    if rem:
+        s, c = one(hidden[:, n * chunk:], labels[:, n * chunk:], mask[:, n * chunk:])
+        tot, cnt = tot + s, cnt + c
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(params, cfg, batch):
+    tokens = batch["tokens"]
+    x = embed_tokens(params, cfg, tokens, batch.get("patch_embeds"))
+    hidden, aux, _ = forward_hidden(params, cfg, x)
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.ones_like(tokens, jnp.float32).at[:, -1].set(0.0)
+    if cfg.family == "vlm":  # don't predict inside the patch prefix
+        mask = mask.at[:, :cfg.n_patches - 1].set(0.0)
+    loss = chunked_ce_loss(params, cfg, hidden, labels, mask)
+    if cfg.family == "moe":
+        loss = loss + 0.01 * aux["load_balance_loss"]
+    return loss, aux
+
+
+# --------------------------------------------------------------------------
+# decode path
+# --------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int):
+    """Decode cache pytree (stacked along the leading layer axis)."""
+    dtype = jnp.dtype(cfg.dtype)
+    L, K, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    if cfg.family in ("dense", "moe", "vlm"):
+        kv = jnp.zeros((L, batch, max_len, K, hd), dtype)
+        return {"k": kv, "v": kv, "pos": jnp.zeros((), jnp.int32)}
+    if cfg.family == "ssm":
+        c = jax.vmap(lambda _: ssm_mod.mlstm_init_cache(cfg, batch, dtype))(
+            jnp.arange(L))
+        return {**c, "pos": jnp.zeros((), jnp.int32)}
+    if cfg.family == "hybrid":
+        c = jax.vmap(lambda _: ssm_mod.mamba2_init_cache(cfg, batch, dtype))(
+            jnp.arange(L))
+        n_attn = (cfg.n_layers + cfg.attn_every - 1) // cfg.attn_every
+        kv = jnp.zeros((n_attn, batch, max_len, K, hd), dtype)
+        return {**c, "ak": kv, "av": kv, "pos": jnp.zeros((), jnp.int32)}
+    raise ValueError(cfg.family)
+
+
+def decode_step(params, cfg, cache, token):
+    """One greedy decode step.  token: [B] int32 -> (new_cache, logits [B, V]).
+
+    Mutated cache buffers ride in the scan *carry* (single buffer, in-place
+    single-token DUS writes) instead of xs/ys — scanning them as ys keeps the
+    old and new cache stacks alive simultaneously (2x peak) and rewrites the
+    full cache every step (the dry-run's memory-term pathology)."""
+    pos = cache["pos"]
+    x = params["tok_embed"][token]                                # [B, D]
+    B = x.shape[0]
+    akw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+               rope_theta=cfg.rope_theta)
+    posv = jnp.full((B,), pos, jnp.int32)
+
+    def attend(lp_attn, h, k_all, v_all, idx):
+        """q/k/v for the token, in-place cache write, attention read."""
+        q, k, v = attn.decode_qkv(lp_attn, h, posv, **akw)
+        k_all = jax.lax.dynamic_update_slice(
+            k_all, k[None].astype(k_all.dtype), (idx, 0, pos, 0, 0))
+        v_all = jax.lax.dynamic_update_slice(
+            v_all, v[None].astype(v_all.dtype), (idx, 0, pos, 0, 0))
+        ck = jax.lax.dynamic_index_in_dim(k_all, idx, 0, keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(v_all, idx, 0, keepdims=False)
+        a = attn.decode_scores(lp_attn, q, ck, cv, posv, n_heads=cfg.n_heads,
+                               n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                               dtype=h.dtype)
+        return a, k_all, v_all
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(carry, inp):
+            x, k_all, v_all = carry
+            lp, idx = inp
+            h = apply_norm(x, lp["norm1"], cfg.norm_type)
+            a, k_all, v_all = attend(lp["attn"], h, k_all, v_all, idx)
+            x = x + a
+            h = apply_norm(x, lp["norm2"], cfg.norm_type)
+            if cfg.family == "moe":
+                y, _ = moe_mod.moe_apply(lp["moe"], h, n_experts=cfg.n_experts,
+                                         top_k=cfg.top_k,
+                                         capacity_factor=cfg.capacity_factor,
+                                         group_size=cfg.moe_group_size,
+                                         impl=cfg.moe_impl,
+                                         expert_axis="data"
+                                         if cfg.expert_data_shard else "model")
+                if cfg.dense_residual:
+                    y = y + mlp_apply(lp["mlp"], h)
+                if cfg.n_shared_experts:
+                    y = y + mlp_apply(lp["shared_mlp"], h)
+            else:
+                y = mlp_apply(lp["mlp"], h)
+            return (x + y, k_all, v_all), None
+
+        (x, k_new, v_new), _ = jax.lax.scan(
+            body, (x, cache["k"], cache["v"]),
+            (params["layers"], jnp.arange(cfg.n_layers)))
+        new_cache = {"k": k_new, "v": v_new, "pos": pos + 1}
+
+    elif cfg.family == "ssm":
+        def body(carry, inp):
+            x, states, convs = carry
+            lp, idx = inp
+            st = jax.lax.dynamic_index_in_dim(states, idx, 0, keepdims=False)
+            cw = jax.lax.dynamic_index_in_dim(convs, idx, 0, keepdims=False)
+            h = apply_norm(x, lp["norm1"], cfg.norm_type)
+            y, c2 = ssm_mod.mlstm_decode(lp["mlstm"], h,
+                                         {"state": st, "conv": cw}, cfg)
+            states = jax.lax.dynamic_update_index_in_dim(
+                states, c2["state"], idx, 0)
+            convs = jax.lax.dynamic_update_index_in_dim(
+                convs, c2["conv"].astype(convs.dtype), idx, 0)
+            return (x + y, states, convs), None
+
+        (x, st, cw), _ = jax.lax.scan(
+            body, (x, cache["state"], cache["conv"]),
+            (params["layers"], jnp.arange(cfg.n_layers)))
+        new_cache = {"state": st, "conv": cw, "pos": pos + 1}
+
+    elif cfg.family == "hybrid":
+        def body(carry, inp):
+            x, states, convs, ak, av = carry
+            lp, idx = inp
+            st = jax.lax.dynamic_index_in_dim(states, idx, 0, keepdims=False)
+            cw = jax.lax.dynamic_index_in_dim(convs, idx, 0, keepdims=False)
+            h = apply_norm(x, lp["norm1"], cfg.norm_type)
+            y, c2 = ssm_mod.mamba2_decode(lp["mamba"], h,
+                                          {"state": st, "conv": cw}, cfg)
+            states = jax.lax.dynamic_update_index_in_dim(
+                states, c2["state"], idx, 0)
+            convs = jax.lax.dynamic_update_index_in_dim(
+                convs, c2["conv"].astype(convs.dtype), idx, 0)
+            x = x + y
+            slot = idx // cfg.attn_every
+
+            def with_attn(arg):
+                x, ak, av = arg
+                h = apply_norm(x, params["shared_attn_norm"], cfg.norm_type)
+                a, ak, av = attend(params["shared_attn"], h, ak, av, slot)
+                x = x + a
+                h = apply_norm(x, params["shared_mlp_norm"], cfg.norm_type)
+                return x + mlp_apply(params["shared_mlp"], h), ak, av
+
+            x, ak, av = jax.lax.cond((idx % cfg.attn_every) == 0, with_attn,
+                                     lambda a: a, (x, ak, av))
+            return (x, states, convs, ak, av), None
+
+        (x, st, cw, ak, av), _ = jax.lax.scan(
+            body, (x, cache["state"], cache["conv"], cache["ak"], cache["av"]),
+            (params["layers"], jnp.arange(cfg.n_layers)))
+        new_cache = {"state": st, "conv": cw, "ak": ak, "av": av, "pos": pos + 1}
+    else:
+        raise ValueError(cfg.family)
+
+    logits = logits_fn(params, cfg, x[:, None, :])[:, 0]
+    return new_cache, logits
+
+
+# --------------------------------------------------------------------------
+# prefill path (inference-prefill shape): build the cache for a full prompt
+# --------------------------------------------------------------------------
+
+def prefill(params, cfg, tokens, max_len: int, patch_embeds=None):
+    """Returns (cache at position S, last-token logits [B, V])."""
+    B, S = tokens.shape
+    x = embed_tokens(params, cfg, tokens, patch_embeds)
+    if cfg.family in ("dense", "moe", "vlm"):
+        hidden, _, (ks, vs) = forward_hidden(params, cfg, x, collect_caches=True)
+        pad = max_len - S
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cache = {"k": ks, "v": vs, "pos": jnp.asarray(S, jnp.int32)}
+    elif cfg.family == "ssm":
+        # run the train path but collect the final GLA state per layer
+        def body(x, lp):
+            h = apply_norm(x, lp["norm1"], cfg.norm_type)
+            u, z = jnp.split(h @ lp["mlstm"]["w_in_ssm"], 2, axis=-1)
+            conv_win = u[:, -(cfg.conv_kernel - 1):, :]
+            u = jax.nn.silu(ssm_mod.causal_conv(u, lp["mlstm"]["conv_w"],
+                                                lp["mlstm"]["conv_b"]))
+            q, k, v_aug, a = ssm_mod._mlstm_qkva(lp["mlstm"], u, cfg)
+            y_aug, state = ssm_mod.chunked_gla(q, k, v_aug, a, chunk=cfg.ssm_chunk)
+            y = ssm_mod._mlstm_finish(y_aug, z, lp["mlstm"], cfg, h.shape[:-1])
+            return x + y, (state, conv_win)
+
+        x, (states, convs) = jax.lax.scan(body, x, params["layers"])
+        hidden = x
+        cache = {"state": states, "conv": convs, "pos": jnp.asarray(S, jnp.int32)}
+    else:  # hybrid — prefill via repeated decode is wasteful; use train path +
+        # final states.  Implemented as scan over layers mirroring train.
+        n_attn = (cfg.n_layers + cfg.attn_every - 1) // cfg.attn_every
+        K, hd = cfg.n_kv_heads, cfg.head_dim
+        ak0 = jnp.zeros((n_attn, B, max_len, K, hd), x.dtype)
+
+        def body(carry, inp):
+            x, ak, av = carry
+            lp, idx = inp
+            h = apply_norm(x, lp["norm1"], cfg.norm_type)
+            zxbcdt = h @ lp["mamba"]["w_in_ssm"]
+            conv = lambda u: ssm_mod.causal_conv(u, lp["mamba"]["conv_w"],
+                                                 lp["mamba"]["conv_b"])
+            q, k, v, a, z, xh = ssm_mod._mamba2_qkva(lp["mamba"], zxbcdt, cfg, conv)
+            y, state = ssm_mod.chunked_gla(q, k, v, a, chunk=cfg.ssm_chunk)
+            y = y + xh * lp["mamba"]["D_skip"][None, None, :, None].astype(xh.dtype)
+            y = y.reshape(*h.shape[:-1], cfg.d_inner)
+            y = ssm_mod.rmsnorm(y * jax.nn.silu(z), lp["mamba"]["out_norm"])
+            x = x + y @ lp["mamba"]["w_out_ssm"]
+            xr = jnp.split(zxbcdt, [cfg.d_inner, 2 * cfg.d_inner], axis=-1)[1]
+            conv_win = xr[:, -(cfg.conv_kernel - 1):, :]
+            slot = idx // cfg.attn_every
+
+            def with_attn(arg):
+                x, ak, av = arg
+                y, (kc, vc) = _shared_block_train(params, x, cfg, collect_kv=True)
+                pad = max_len - S
+                kc = jnp.pad(kc, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                vc = jnp.pad(vc, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                ak = jax.lax.dynamic_update_index_in_dim(ak, kc, slot, 0)
+                av = jax.lax.dynamic_update_index_in_dim(av, vc, slot, 0)
+                return y, ak, av
+
+            x, ak, av = jax.lax.cond((idx % cfg.attn_every) == 0, with_attn,
+                                     lambda a: a, (x, ak, av))
+            return (x, ak, av), (state, conv_win)
+
+        (x, ak, av), (states, convs) = jax.lax.scan(
+            body, (x, ak0, ak0), (params["layers"], jnp.arange(cfg.n_layers)))
+        hidden = x
+        cache = {"state": states, "conv": convs, "ak": ak, "av": av,
+                 "pos": jnp.asarray(S, jnp.int32)}
+    last = logits_fn(params, cfg, hidden[:, -1:, :])[:, 0]
+    return cache, last

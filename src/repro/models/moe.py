@@ -1,0 +1,256 @@
+"""Mixture-of-Experts layer with sort-based dispatch (static shapes).
+
+Dispatch is gather/scatter based (argsort tokens by expert id, capacity-
+bounded slots) instead of the GShard one-hot-einsum formulation: the einsum
+dispatch costs O(T*E*C*D) FLOPs which for 128-expert configs exceeds the
+expert matmuls themselves; sort-based dispatch is O(T log T) + pure data
+movement.  Expert weights are sharded over the ``model`` axis (expert
+parallelism) when n_experts divides the axis, else TP on the ffn dim
+(see repro.dist.sharding).
+
+Tokens over capacity are dropped (standard capacity-factor semantics) and the
+drop count is returned as a metric.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ambient_mesh, maybe_constrain
+from repro.models.layers import dense_init, swiglu
+
+GROUP_SIZE = 4096    # tokens per dispatch group (GShard-style grouping)
+
+
+def init_moe(key, d_model: int, n_experts: int, d_expert: int, dtype):
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / jnp.sqrt(d_model)
+    e_init = lambda k, a, b: (jax.random.truncated_normal(
+        k, -2.0, 2.0, (n_experts, a, b), jnp.float32) * scale).astype(dtype)
+    return {
+        "router": dense_init(ks[0], d_model, n_experts, jnp.float32),
+        "experts_gate": e_init(ks[1], d_model, d_expert),
+        "experts_up": e_init(ks[2], d_model, d_expert),
+        "experts_down": (jax.random.truncated_normal(
+            ks[3], -2.0, 2.0, (n_experts, d_expert, d_model), jnp.float32)
+            / jnp.sqrt(d_expert)).astype(dtype),
+    }
+
+
+def capacity(n_tokens: int, n_experts: int, top_k: int, factor: float) -> int:
+    c = int(n_tokens * top_k * factor / n_experts)
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def moe_apply(params, x, *, n_experts: int, top_k: int, capacity_factor: float,
+              impl: str = "auto", group_size: int = GROUP_SIZE,
+              expert_axis: str = "model"):
+    """x: [T, D] flattened tokens -> [T, D].
+
+    impl: 'sorted' (exact, single-device friendly), 'einsum' (GShard-style
+    grouped one-hot dispatch — partitions cleanly under GSPMD), or 'auto'
+    (einsum when a mesh context is active, else sorted).
+    Returns (y, aux) with aux = dict(load_balance_loss, dropped_fraction).
+    """
+    if impl == "auto":
+        impl = "einsum" if ambient_mesh() is not None else "sorted"
+    if impl == "shard_map":
+        return moe_apply_shard_map(params, x, n_experts=n_experts,
+                                   top_k=top_k,
+                                   capacity_factor=capacity_factor)
+    if impl == "einsum":
+        return moe_apply_einsum(params, x, n_experts=n_experts, top_k=top_k,
+                                capacity_factor=capacity_factor,
+                                group_size=group_size, expert_axis=expert_axis)
+    T, D = x.shape
+    C = capacity(T, n_experts, top_k, capacity_factor)
+
+    logits = (x.astype(jnp.float32) @ params["router"])          # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)          # [T, k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # ---- flatten the (token, choice) pairs and sort by expert ----
+    flat_e = expert_ids.reshape(-1)                              # [T*k]
+    flat_t = jnp.repeat(jnp.arange(T), top_k)
+    flat_w = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    t_sorted = flat_t[order]
+    w_sorted = flat_w[order]
+
+    counts = jnp.bincount(flat_e, length=n_experts)              # [E]
+    starts = jnp.cumsum(counts) - counts
+    slot = jnp.arange(T * top_k) - starts[e_sorted]              # pos within expert
+    ok = slot < C
+    slot = jnp.where(ok, slot, 0)
+
+    # ---- dispatch: scatter token activations into [E, C, D] buffers ----
+    gathered = jnp.where(ok[:, None], x[t_sorted], 0).astype(x.dtype)
+    buf = jnp.zeros((n_experts, C, D), x.dtype).at[e_sorted, slot].add(
+        gathered, mode="drop")
+    # expert-parallel placement: the scatter above becomes the MoE all-to-all
+    buf = maybe_constrain(buf, "model", None, None)
+
+    # ---- expert computation (einsum over the expert axis => EP shardable) --
+    h = swiglu(jnp.einsum("ecd,edf->ecf", buf, params["experts_gate"]),
+               jnp.einsum("ecd,edf->ecf", buf, params["experts_up"]))
+    out = jnp.einsum("ecf,efd->ecd", h, params["experts_down"])  # [E, C, D]
+
+    # ---- combine: gather expert outputs back to token order ----
+    expert_out = out[e_sorted, slot]                             # [T*k, D]
+    expert_out = expert_out * (w_sorted * ok).astype(expert_out.dtype)[:, None]
+    y = jnp.zeros((T, D), x.dtype).at[t_sorted].add(
+        expert_out.astype(x.dtype), mode="drop")
+
+    # ---- aux metrics ----
+    me = jnp.mean(probs, axis=0)                                 # mean router prob
+    ce = jnp.mean(jax.nn.one_hot(expert_ids, n_experts, dtype=jnp.float32),
+                  axis=(0, 1)) * n_experts
+    lb_loss = jnp.sum(me * ce)
+    dropped = 1.0 - jnp.mean(ok.astype(jnp.float32))
+    return y, {"load_balance_loss": lb_loss, "dropped_fraction": dropped}
+
+
+def moe_apply_einsum(params, x, *, n_experts: int, top_k: int,
+                     capacity_factor: float, group_size: int = GROUP_SIZE,
+                     expert_axis: str = "model"):
+    """GShard-style grouped one-hot dispatch [arXiv:2006.16668].
+
+    Tokens are split into groups of GROUP_SIZE; each group dispatches into a
+    per-group [E, C, D] buffer via a one-hot einsum.  Under GSPMD the groups
+    shard over the data axis and the expert axis over the model axis, so the
+    g->e resharding lowers to the MoE all-to-all.  The one-hot dispatch /
+    combine einsums cost ~2*2.5*T*D extra FLOPs each — the 'GShard dispatch
+    tax' that the shard_map EP path removes (see EXPERIMENTS §Perf).
+    """
+    T, D = x.shape
+    E = n_experts
+    G = max(T // group_size, 1)
+    Tg = T // G
+    assert G * Tg == T, "tokens must divide groups"
+    C = capacity(Tg, E, top_k, capacity_factor)
+
+    xg = maybe_constrain(x.reshape(G, Tg, D), "batch", None, None)
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)          # [G,Tg,k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # position of each (token, choice) within its expert, priority = choice
+    onehot = jax.nn.one_hot(expert_ids, E, dtype=jnp.float32)    # [G,Tg,k,E]
+    prio = onehot.transpose(0, 2, 1, 3).reshape(G, top_k * Tg, E)
+    pos = jnp.cumsum(prio, axis=1) - prio                        # [G,k*Tg,E]
+    pos = pos.reshape(G, top_k, Tg, E).transpose(0, 2, 1, 3)     # [G,Tg,k,E]
+    in_cap = (pos < C) & (onehot > 0)
+    dropped = 1.0 - jnp.mean(jnp.sum(in_cap, axis=-1))
+
+    slot_oh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=x.dtype) * \
+        in_cap[..., None].astype(x.dtype)                        # [G,Tg,k,E,C]
+    dispatch = jnp.sum(slot_oh, axis=2)                          # [G,Tg,E,C]
+    combine = jnp.sum(slot_oh * gate_vals[..., None, None].astype(x.dtype),
+                      axis=2)                                    # [G,Tg,E,C]
+
+    buf = jnp.einsum("gtec,gtd->gecd", dispatch, xg)             # [G,E,C,D]
+    # expert placement: 'model' = classic EP over the TP axis; 'data' =
+    # resident experts on the data axis (tokens a2a to them; weights never
+    # re-gathered — see EXPERIMENTS §Perf, arctic hillclimb)
+    if expert_axis == "data":
+        buf = maybe_constrain(buf, None, "batch", None, None)
+        h = swiglu(jnp.einsum("gecd,edf->gecf", buf, params["experts_gate"]),
+                   jnp.einsum("gecd,edf->gecf", buf, params["experts_up"]))
+        h = maybe_constrain(h, None, "batch", None, "model")
+        out = jnp.einsum("gecf,efd->gecd", h, params["experts_down"])
+        out = maybe_constrain(out, None, "batch", None, None)
+    else:
+        buf = maybe_constrain(buf, "batch", "model", None, None)
+        h = swiglu(jnp.einsum("gecd,edf->gecf", buf, params["experts_gate"]),
+                   jnp.einsum("gecd,edf->gecf", buf, params["experts_up"]))
+        out = jnp.einsum("gecf,efd->gecd", h, params["experts_down"])
+        out = maybe_constrain(out, "batch", "model", None, None)
+    y = jnp.einsum("gtec,gecd->gtd", combine, out).reshape(T, D)
+
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(onehot, axis=(0, 1, 2)) * E
+    lb_loss = jnp.sum(me * ce)
+    return y, {"load_balance_loss": lb_loss, "dropped_fraction": dropped}
+
+def moe_apply_shard_map(params, x, *, n_experts: int, top_k: int,
+                        capacity_factor: float):
+    """Explicit expert parallelism via shard_map (the §Perf arctic hillclimb).
+
+    Per-device sort-based dispatch (no one-hot einsums), one all_to_all of
+    the routed token slots to the resident experts (E over the data axis,
+    ffn dim column-parallel over the model axis), one psum of the expert
+    outputs, inverse all_to_all, local weighted combine.  Collective volume
+    per layer = routed slots x D (+ the model-axis output reduction) —
+    orders of magnitude less than the GShard einsum path's F-contraction
+    gather at arctic scale.
+
+    Requires: E % data_axis == 0; x enters sharded (batch x seq over all
+    devices, D full).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.sharding import ambient_mesh, dp_axes
+
+    mesh = ambient_mesh()
+    assert mesh is not None, "shard_map MoE needs a mesh context"
+    dp = dp_axes(mesh)
+    dsize = 1
+    for a in dp:
+        dsize *= mesh.shape[a]
+    msize = mesh.shape.get("model", 1)
+    E = n_experts
+    assert E % dsize == 0, "experts must divide the data axis"
+    T, D = x.shape
+    T_loc = T // (dsize * msize)
+    C_loc = capacity(T_loc, E, top_k, capacity_factor)
+
+    def local(x_loc, router, w_gate, w_up, w_down):
+        # x_loc [T_loc, D]; router [D, E]; w_* local expert slices
+        logits = x_loc.astype(jnp.float32) @ router
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, expert_ids = jax.lax.top_k(probs, top_k)
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+        flat_e = expert_ids.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(T_loc), top_k)
+        flat_w = gate_vals.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        e_s, t_s, w_s = flat_e[order], flat_t[order], flat_w[order]
+        counts = jnp.bincount(flat_e, length=E)
+        starts = jnp.cumsum(counts) - counts
+        slot = jnp.arange(T_loc * top_k) - starts[e_s]
+        ok = slot < C_loc
+        slot = jnp.where(ok, slot, 0)
+        gathered = jnp.where(ok[:, None], x_loc[t_s], 0).astype(x_loc.dtype)
+        buf = jnp.zeros((E, C_loc, D), x_loc.dtype).at[e_s, slot].add(
+            gathered, mode="drop")
+        # route slots to the experts' home data-shards
+        buf = jax.lax.all_to_all(buf, dp, split_axis=0, concat_axis=1,
+                                 tiled=True)              # [e_loc, S*C_loc, D]
+        h = swiglu(jnp.einsum("ecd,edf->ecf", buf, w_gate),
+                   jnp.einsum("ecd,edf->ecf", buf, w_up))
+        out = jnp.einsum("ecf,efd->ecd", h, w_down)       # partial over F
+        out = jax.lax.psum(out, "model")
+        out = jax.lax.all_to_all(out, dp, split_axis=1, concat_axis=0,
+                                 tiled=True)              # [E, C_loc, D]
+        expert_out = out[e_s, slot] * (w_s * ok).astype(out.dtype)[:, None]
+        y = jnp.zeros((T_loc, D), x_loc.dtype).at[t_s].add(
+            expert_out.astype(x_loc.dtype), mode="drop")
+        me = jax.lax.pmean(jnp.mean(probs, axis=0), dp + ("model",))
+        ce = jax.lax.pmean(jnp.mean(jax.nn.one_hot(
+            expert_ids, E, dtype=jnp.float32), axis=(0, 1)), dp + ("model",))
+        lb = jnp.sum(me * ce * E)
+        dropped = 1.0 - jax.lax.pmean(jnp.mean(ok.astype(jnp.float32)),
+                                      dp + ("model",))
+        return y, lb, dropped
+
+    tok_spec = P((*dp, "model"), None)       # tokens sharded over all devices
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(tok_spec, P(None, None), P(dp, None, "model"),
+                             P(dp, None, "model"), P(dp, "model", None)),
+                   out_specs=(tok_spec, P(), P()), check_rep=False)
+    y, lb, dropped = fn(x, params["router"], params["experts_gate"],
+                        params["experts_up"], params["experts_down"])
+    return y, {"load_balance_loss": lb, "dropped_fraction": dropped}

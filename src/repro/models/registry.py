@@ -1,0 +1,86 @@
+"""Model registry: uniform (init / loss / prefill / decode / input_specs) API
+for every assigned architecture."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, lm
+
+
+def is_encdec(cfg) -> bool:
+    return cfg.family == "audio"
+
+
+def init_params(cfg, key):
+    return encdec.init_encdec(cfg, key) if is_encdec(cfg) else lm.init_lm(cfg, key)
+
+
+def loss_fn(cfg):
+    if is_encdec(cfg):
+        return lambda params, batch: encdec.encdec_loss(params, cfg, batch)
+    return lambda params, batch: lm.lm_loss(params, cfg, batch)
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    if is_encdec(cfg):
+        return encdec.init_cache(cfg, batch, max_len, enc_len=max_len // cfg.enc_ratio)
+    return lm.init_cache(cfg, batch, max_len)
+
+
+def decode_fn(cfg):
+    if is_encdec(cfg):
+        return lambda params, cache, token: encdec.decode_step(params, cfg, cache, token)
+    return lambda params, cache, token: lm.decode_step(params, cfg, cache, token)
+
+
+def prefill_fn(cfg, max_len: int):
+    if is_encdec(cfg):
+        return lambda params, batch: encdec.prefill(params, cfg, batch["tokens"],
+                                                    batch["frames"], max_len)
+    return lambda params, batch: lm.prefill(params, cfg, batch["tokens"], max_len,
+                                            batch.get("patch_embeds"))
+
+
+def input_specs(cfg, shape, *, dtype=None):
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell.
+
+    For ``train``/``prefill``: the full batch.  For ``decode``: the per-step
+    token batch (the cache is built separately via ``cache_specs``).
+    """
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "decode":
+        return {"token": sds((B,), jnp.int32)}
+    specs = {"tokens": sds((B, S), jnp.int32)}
+    if cfg.family == "vlm":
+        specs["patch_embeds"] = sds((B, cfg.n_patches, cfg.d_model), dtype)
+    if is_encdec(cfg):
+        specs["frames"] = sds((B, S // cfg.enc_ratio, cfg.d_model), dtype)
+    return specs
+
+
+def cache_specs(cfg, shape):
+    """ShapeDtypeStructs of the decode cache for a shape cell (no allocation)."""
+    return jax.eval_shape(lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+
+
+def param_specs_tree(cfg, key=None):
+    """Shape/dtype pytree of the parameters (no allocation)."""
+    k = key if key is not None else jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda: init_params(cfg, k))
+
+
+def make_batch(cfg, shape, key, *, vocab_cap=None):
+    """Materialize a concrete random batch (for smoke tests / benchmarks)."""
+    specs = input_specs(cfg, shape)
+    out = {}
+    for name, s in specs.items():
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            hi = vocab_cap or cfg.vocab
+            out[name] = jax.random.randint(sub, s.shape, 0, hi, s.dtype)
+        else:
+            out[name] = jax.random.normal(sub, s.shape, jnp.float32).astype(s.dtype)
+    return out

@@ -1,0 +1,273 @@
+"""Sub-quadratic sequence mixers: a shared chunked gated-linear-attention
+core, instantiated as Mamba2 (SSD) and mLSTM (xLSTM) blocks.
+
+Recurrence (per head):  S_t = exp(a_t) * S_{t-1} + k_t v_t^T,   y_t = q_t^T S_t
+with a_t <= 0 (log-decay).  The chunked form computes an intra-chunk
+decay-masked attention plus a cross-chunk term from the carried state; all
+exponents are differences of a *decreasing* cumulative sum, hence <= 0 and
+numerically safe in fp32.
+
+Mamba2 mapping:  q=C, k=B, v=dt*x (per-head), a=A*dt          [arXiv:2405.21060]
+mLSTM mapping:   q,k,v projections, a=log_sigmoid(f_pre); the xLSTM
+normalizer n_t is tracked as an appended all-ones value column; the exp input
+gate is realized as a bounded sigmoid(i_pre) scaling of k (stabilization
+deviation from the paper, noted in DESIGN.md).     [arXiv:2405.04517]
+
+Decode: single-step recurrence carrying (state, conv window) — O(1) per token,
+which is why these families run the long_500k shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import maybe_constrain
+from repro.models.layers import dense_init, rmsnorm
+
+
+# --------------------------------------------------------------------------
+# chunked gated linear attention core
+# --------------------------------------------------------------------------
+
+def chunked_gla(q, k, v, log_decay, *, chunk: int, initial_state=None):
+    """q,k: [B,S,H,dk]; v: [B,S,H,dv]; log_decay: [B,S,H] (<=0).
+
+    Returns (y [B,S,H,dv], final_state [B,H,dk,dv]).
+    """
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, S)
+    n = S // chunk
+    assert n * chunk == S, "seq must divide ssm chunk"
+
+    # head-parallel: keep the recurrence local to a device along H
+    q = maybe_constrain(q, "batch", None, "model", None)
+    k = maybe_constrain(k, "batch", None, "model", None)
+    v = maybe_constrain(v, "batch", None, "model", None)
+    log_decay = maybe_constrain(log_decay, "batch", None, "model")
+
+    qc = q.reshape(B, n, chunk, H, dk).transpose(1, 0, 3, 2, 4)   # [n,B,H,L,dk]
+    kc = k.reshape(B, n, chunk, H, dk).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, n, chunk, H, dv).transpose(1, 0, 3, 2, 4)
+    ac = log_decay.reshape(B, n, chunk, H).transpose(1, 0, 3, 2)  # [n,B,H,L]
+
+    S0 = (jnp.zeros((B, H, dk, dv), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(state, inp):
+        qb, kb, vb, ab = inp                   # [B,H,L,*]
+        cum = jnp.cumsum(ab.astype(jnp.float32), axis=-1)         # [B,H,L]
+        # intra-chunk: scores[t,j] = (q_t.k_j) exp(cum_t - cum_j), t >= j
+        diff = cum[..., :, None] - cum[..., None, :]              # [B,H,L,L]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        decay = jnp.where(tri, jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+        scores = jnp.einsum("bhtd,bhjd->bhtj", qb.astype(jnp.float32),
+                            kb.astype(jnp.float32)) * decay
+        y_intra = jnp.einsum("bhtj,bhjv->bhtv", scores, vb.astype(jnp.float32))
+        # cross-chunk: y_t += (q_t exp(cum_t)) @ S_prev
+        q_scaled = qb.astype(jnp.float32) * jnp.exp(cum)[..., None]
+        y_cross = jnp.einsum("bhtd,bhdv->bhtv", q_scaled, state)
+        # state update: S_new = exp(cum_L) S + sum_j exp(cum_L - cum_j) k_j v_j^T
+        last = cum[..., -1:]                                      # [B,H,1]
+        k_scaled = kb.astype(jnp.float32) * jnp.exp(last - cum)[..., None]
+        outer = jnp.einsum("bhjd,bhjv->bhdv", k_scaled, vb.astype(jnp.float32))
+        state = jnp.exp(last)[..., None] * state + outer
+        return state, (y_intra + y_cross).astype(v.dtype)
+
+    # remat: recompute the [B,H,L,L] intra-chunk decay/score matrices in bwd
+    final, yc = jax.lax.scan(jax.checkpoint(step), S0, (qc, kc, vc, ac))
+    y = yc.transpose(1, 0, 3, 2, 4).reshape(B, S, H, dv)
+    return y, final
+
+
+def gla_decode_step(state, q, k, v, log_decay):
+    """One-token recurrence.  state: [B,H,dk,dv]; q,k: [B,H,dk]; v: [B,H,dv]."""
+    decay = jnp.exp(log_decay.astype(jnp.float32))[..., None, None]
+    state = decay * state + jnp.einsum(
+        "bhd,bhv->bhdv", k.astype(jnp.float32), v.astype(jnp.float32))
+    y = jnp.einsum("bhd,bhdv->bhv", q.astype(jnp.float32), state)
+    return state, y.astype(v.dtype)
+
+
+# --------------------------------------------------------------------------
+# causal depthwise conv (Mamba-style, kernel k)
+# --------------------------------------------------------------------------
+
+def causal_conv(x, w, b):
+    """x: [B,S,C]; w: [C,k]; causal depthwise conv along S.
+
+    tap i of the kernel multiplies the input delayed by (k-1-i) steps, i.e.
+    out_t = sum_i w[:, i] * x_{t - (k-1-i)}  (unrolled: k is 4).
+    """
+    k = w.shape[-1]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[:, i][None, None, :]
+              for i in range(k))
+    return out + b[None, None, :]
+
+
+def conv_decode_step(window, x_t, w, b):
+    """window: [B, k-1, C] past inputs; x_t: [B, C]."""
+    full = jnp.concatenate([window, x_t[:, None, :]], axis=1)     # [B,k,C]
+    out = jnp.einsum("bkc,ck->bc", full, w) + b[None, :]
+    return full[:, 1:, :], out
+
+
+# --------------------------------------------------------------------------
+# Mamba2 block
+# --------------------------------------------------------------------------
+
+def init_mamba2(key, cfg):
+    D, d_inner, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    ks = jax.random.split(key, 6)
+    dtype = jnp.dtype(cfg.dtype)
+    proj_out = 2 * d_inner + 2 * N + H                             # z, x, B, C, dt
+    return {
+        "w_in_ssm": dense_init(ks[0], D, proj_out, dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_inner, cfg.conv_kernel), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "out_norm": jnp.zeros((d_inner,), dtype),
+        "w_out_ssm": dense_init(ks[2], d_inner, D, dtype),
+    }
+
+
+def _mamba2_qkva(params, zxbcdt, cfg, conv_apply):
+    """Split the input projection and build (q, k, v, a, z) for the GLA core."""
+    d_inner, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    P = cfg.ssm_headdim
+    z, xr, Bc, Cc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N], axis=-1)
+    xr = conv_apply(xr)
+    xr = jax.nn.silu(xr)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # [...,H]
+    A = -jnp.exp(params["A_log"])                                      # [H] < 0
+    a = dt * A                                                         # log-decay
+    shape = xr.shape[:-1]
+    v = xr.reshape(*shape, H, P) * dt[..., None].astype(xr.dtype)
+    q = jnp.broadcast_to(Cc[..., None, :], (*shape, H, N))
+    k = jnp.broadcast_to(Bc[..., None, :], (*shape, H, N))
+    return q, k, v, a, z, xr.reshape(*shape, H, P)
+
+
+def mamba2_train(params, x, cfg):
+    """x: [B,S,D] -> [B,S,D]."""
+    zxbcdt = x @ params["w_in_ssm"]
+    conv = lambda u: causal_conv(u, params["conv_w"], params["conv_b"])
+    q, k, v, a, z, xh = _mamba2_qkva(params, zxbcdt, cfg, conv)
+    y, _ = chunked_gla(q, k, v, a, chunk=cfg.ssm_chunk)
+    y = y + xh * params["D_skip"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(*x.shape[:-1], cfg.d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), params["out_norm"])
+    return y @ params["w_out_ssm"]
+
+
+def mamba2_init_cache(cfg, batch: int, dtype):
+    return {
+        "state": jnp.zeros((batch, cfg.n_ssm_heads, cfg.ssm_state, cfg.ssm_headdim),
+                           jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, cfg.d_inner), dtype),
+    }
+
+
+def mamba2_decode(params, x_t, cache, cfg):
+    """x_t: [B, D]; one-step."""
+    zxbcdt = x_t @ params["w_in_ssm"]
+
+    def conv(u):
+        nonlocal cache
+        win, out = conv_decode_step(cache["conv"], u, params["conv_w"],
+                                    params["conv_b"])
+        cache = dict(cache, conv=win)
+        return out
+
+    q, k, v, a, z, xh = _mamba2_qkva(params, zxbcdt, cfg, conv)
+    state, y = gla_decode_step(cache["state"], k=k, q=q, v=v, log_decay=a)
+    cache = dict(cache, state=state)
+    y = y + xh * params["D_skip"][None, :, None].astype(xh.dtype)
+    y = y.reshape(x_t.shape[0], cfg.d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), params["out_norm"])
+    return y @ params["w_out_ssm"], cache
+
+
+# --------------------------------------------------------------------------
+# mLSTM block (xLSTM)
+# --------------------------------------------------------------------------
+
+def _mlstm_dims(cfg):
+    H = cfg.n_heads
+    d_inner = cfg.d_inner
+    dk = cfg.d_model // H
+    dv = d_inner // H
+    return H, d_inner, dk, dv
+
+
+def init_mlstm(key, cfg):
+    D = cfg.d_model
+    H, d_inner, dk, dv = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 5)
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "w_in_ssm": dense_init(ks[0], D, 2 * d_inner, dtype),      # u, z
+        "conv_w": (jax.random.normal(ks[1], (d_inner, cfg.conv_kernel), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "w_qk": dense_init(ks[2], d_inner, 2 * H * dk, dtype),
+        "w_if": dense_init(ks[3], d_inner, 2 * H, dtype),
+        "out_norm": jnp.zeros((d_inner,), dtype),
+        "w_out_ssm": dense_init(ks[4], d_inner, D, dtype),
+    }
+
+
+def _mlstm_qkva(params, u, cfg):
+    H, d_inner, dk, dv = _mlstm_dims(cfg)
+    shape = u.shape[:-1]
+    qk = u @ params["w_qk"]
+    q, k = jnp.split(qk.reshape(*shape, H, 2 * dk), 2, axis=-1)
+    v = u.reshape(*shape, H, dv)
+    gates = (u @ params["w_if"]).astype(jnp.float32).reshape(*shape, H, 2)
+    i_pre, f_pre = gates[..., 0], gates[..., 1]
+    a = jax.nn.log_sigmoid(f_pre)                                  # log-decay
+    k = k * jax.nn.sigmoid(i_pre)[..., None].astype(k.dtype)       # bounded input gate
+    k = k / jnp.sqrt(dk).astype(k.dtype)
+    # normalizer column: v_aug[..., -1] accumulates the gate mass
+    v_aug = jnp.concatenate([v, jnp.ones((*v.shape[:-1], 1), v.dtype)], axis=-1)
+    return q, k, v_aug, a
+
+
+def _mlstm_finish(y_aug, z, params, cfg, lead_shape):
+    dv = _mlstm_dims(cfg)[3]
+    y, nrm = y_aug[..., :dv], y_aug[..., dv:]
+    y = y / jnp.maximum(jnp.abs(nrm.astype(jnp.float32)), 1.0).astype(y.dtype)
+    y = y.reshape(*lead_shape, cfg.d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), params["out_norm"])
+    return y @ params["w_out_ssm"]
+
+
+def mlstm_train(params, x, cfg):
+    u, z = jnp.split(x @ params["w_in_ssm"], 2, axis=-1)
+    u = jax.nn.silu(causal_conv(u, params["conv_w"], params["conv_b"]))
+    q, k, v_aug, a = _mlstm_qkva(params, u, cfg)
+    y_aug, _ = chunked_gla(q, k, v_aug, a, chunk=cfg.ssm_chunk)
+    return _mlstm_finish(y_aug, z, params, cfg, x.shape[:-1])
+
+
+def mlstm_init_cache(cfg, batch: int, dtype):
+    H, d_inner, dk, dv = _mlstm_dims(cfg)
+    return {
+        "state": jnp.zeros((batch, H, dk, dv + 1), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, d_inner), dtype),
+    }
+
+
+def mlstm_decode(params, x_t, cache, cfg):
+    u, z = jnp.split(x_t @ params["w_in_ssm"], 2, axis=-1)
+    win, u = conv_decode_step(cache["conv"], u, params["conv_w"], params["conv_b"])
+    u = jax.nn.silu(u)
+    q, k, v_aug, a = _mlstm_qkva(params, u, cfg)
+    state, y_aug = gla_decode_step(cache["state"], q=q, k=k, v=v_aug, log_decay=a)
+    cache = {"state": state, "conv": win}
+    return _mlstm_finish(y_aug, z, params, cfg, x_t.shape[:-1]), cache

@@ -1,0 +1,61 @@
+"""Batched serving engines: LM decode and discovery-query serving.
+
+``LMEngine`` does prefill + greedy decode over a fixed batch of prompts.
+``DiscoveryEngine`` serves batched discovery plans over a lake (the paper's
+deployment mode: the index is resident, queries stream in).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.executor import Executor
+from repro.core.index import build_index
+from repro.train.step import make_prefill_step, make_serve_step
+
+
+class LMEngine:
+    def __init__(self, cfg, params, max_len: int):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self._prefill = jax.jit(make_prefill_step(cfg, max_len))
+        self._decode = jax.jit(make_serve_step(cfg), donate_argnums=1)
+
+    def generate(self, batch: dict, n_tokens: int):
+        cache, tok = self._prefill(self.params, batch)
+        out = [np.asarray(tok)]
+        for _ in range(n_tokens - 1):
+            cache, tok, _ = self._decode(self.params, cache, tok)
+            out.append(np.asarray(tok))
+        return np.stack(out, axis=1)        # [B, n_tokens]
+
+
+@dataclass
+class DiscoveryResponse:
+    table_ids: list
+    seconds: float
+    plan_nodes: int
+
+
+class DiscoveryEngine:
+    def __init__(self, lake, cost_model=None):
+        self.lake = lake
+        self.index = build_index(lake)
+        self.executor = Executor(self.index)
+        self.cost_model = cost_model
+
+    def serve(self, plan, optimize: bool = True) -> DiscoveryResponse:
+        t0 = time.perf_counter()
+        rs, info = self.executor.run(plan, optimize=optimize,
+                                     cost_model=self.cost_model)
+        return DiscoveryResponse(table_ids=[int(t) for t in rs.ids()],
+                                 seconds=time.perf_counter() - t0,
+                                 plan_nodes=len(plan.nodes))
+
+    def serve_many(self, plans, optimize: bool = True):
+        return [self.serve(p, optimize=optimize) for p in plans]

@@ -1,0 +1,97 @@
+"""Checkpointing + elastic resharding.
+
+Atomic (tmp + rename) directory checkpoints: a msgpack manifest (paths,
+shapes, dtypes, step) + one raw buffer file per leaf.  ``restore`` can place
+leaves onto a *different* mesh than the one that saved them (elastic scaling:
+recompute param specs for the new topology and device_put shard-by-shard).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+from pathlib import Path
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _flatten(state):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(state)
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", p)) for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def save(state, directory, step: int, keep: int = 3):
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / f"step_{step:08d}"
+    tmp = Path(tempfile.mkdtemp(dir=directory, prefix=".tmp_"))
+    leaves, _ = _flatten(state)
+    manifest = {"step": step, "leaves": {}}
+    for key, leaf in leaves.items():
+        arr = np.asarray(leaf)
+        fname = key.replace("/", "__") + ".bin"
+        manifest["leaves"][key] = {"shape": list(arr.shape),
+                                   "dtype": str(arr.dtype), "file": fname}
+        with open(tmp / fname, "wb") as f:
+            f.write(arr.tobytes())
+    with open(tmp / "manifest.msgpack", "wb") as f:
+        f.write(msgpack.packb(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)                     # atomic publish
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: Path, keep: int):
+    ckpts = sorted(d for d in directory.iterdir()
+                   if d.is_dir() and d.name.startswith("step_"))
+    for d in ckpts[:-keep]:
+        shutil.rmtree(d)
+
+
+def latest_step(directory) -> int | None:
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    steps = [int(d.name.split("_")[1]) for d in directory.iterdir()
+             if d.is_dir() and d.name.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore(template, directory, step: int | None = None, *, mesh=None,
+            shardings=None):
+    """Restore into the structure of ``template`` (a pytree of arrays or
+    ShapeDtypeStructs).  With ``shardings`` (same pytree of NamedShardings,
+    possibly for a *different* mesh than the saver's), leaves are device_put
+    with the new placement — elastic rescale."""
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    d = directory / f"step_{step:08d}"
+    with open(d / "manifest.msgpack", "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    leaves, treedef = _flatten(template)
+    shard_leaves = _flatten(shardings)[0] if shardings is not None else {}
+    restored = []
+    for key, leaf in leaves.items():
+        meta = manifest["leaves"][key]
+        with open(d / meta["file"], "rb") as f:
+            arr = np.frombuffer(f.read(), dtype=np.dtype(meta["dtype"]))
+        arr = arr.reshape(meta["shape"])
+        if key in shard_leaves:
+            arr = jax.device_put(arr, shard_leaves[key])
+        restored.append(arr)
+    keys = list(leaves.keys())
+    # rebuild in treedef order
+    path_leaves = dict(zip(keys, restored))
+    flat = [path_leaves[k] for k in keys]
+    return jax.tree_util.tree_unflatten(treedef, flat), manifest["step"]

@@ -1,0 +1,88 @@
+"""Jittable train / serve step builders used by the launcher and the dry-run."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import registry
+from repro.train.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def make_train_state(cfg, key, opt_cfg: AdamWConfig | None = None):
+    opt_cfg = opt_cfg or _default_opt(cfg)
+    params = registry.init_params(cfg, key)
+    return {"params": params, "opt": adamw_init(params, opt_cfg)}
+
+
+def train_state_specs(cfg, opt_cfg: AdamWConfig | None = None):
+    return jax.eval_shape(
+        lambda: make_train_state(cfg, jax.random.PRNGKey(0), opt_cfg))
+
+
+def _default_opt(cfg):
+    return AdamWConfig(state_dtype=cfg.opt_state_dtype,
+                       factored=getattr(cfg, "opt_factored", False))
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig | None = None):
+    opt_cfg = opt_cfg or _default_opt(cfg)
+    loss = registry.loss_fn(cfg)
+    accum = max(getattr(cfg, "grad_accum", 1), 1)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss, has_aux=True)(params, batch)
+
+    def train_step(state, batch):
+        if accum == 1:
+            (l, aux), grads = grads_of(state["params"], batch)
+        else:
+            # microbatched gradient accumulation (activation memory / accum)
+            micro = jax.tree.map(
+                lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]),
+                batch)
+
+            def mb_step(carry, mb):
+                gacc, lacc, aacc = carry
+                (l, aux), g = grads_of(state["params"], mb)
+                gacc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), gacc, g)
+                aacc = jax.tree.map(lambda a, b: a + b, aacc, aux)
+                return (gacc, lacc + l, aacc), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype),
+                                 state["params"])
+            aux0 = jax.eval_shape(lambda p, b: grads_of(p, b)[0][1],
+                                  state["params"],
+                                  jax.tree.map(lambda x: x[0], micro))
+            aux0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), aux0)
+            (grads, l, aux), _ = jax.lax.scan(
+                mb_step, (zeros, jnp.zeros(()), aux0), micro)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            l = l / accum
+            aux = jax.tree.map(lambda a: a / accum, aux)
+        params, opt = adamw_update(state["params"], grads, state["opt"], opt_cfg)
+        metrics = {"loss": l, **{k: v for k, v in aux.items()}}
+        return {"params": params, "opt": opt}, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg):
+    decode = registry.decode_fn(cfg)
+
+    def serve_step(params, cache, token):
+        new_cache, logits = decode(params, cache, token)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return new_cache, next_token, logits
+
+    return serve_step
+
+
+def make_prefill_step(cfg, max_len: int):
+    prefill = registry.prefill_fn(cfg, max_len)
+
+    def prefill_step(params, batch):
+        cache, logits = prefill(params, batch)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return cache, next_token
+
+    return prefill_step

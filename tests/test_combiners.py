@@ -1,0 +1,65 @@
+"""Combiner set-algebra properties (hypothesis)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import combiners as C
+
+N = 32
+
+
+def _rs(rng):
+    scores = rng.uniform(0, 10, N).astype(np.float32)
+    mask = rng.random(N) < 0.5
+    scores = np.where(mask, scores, 0.0)
+    return C.ResultSet(jnp.asarray(scores), jnp.asarray(mask))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_set_algebra(seed):
+    rng = np.random.default_rng(seed)
+    a, b = _rs(rng), _rs(rng)
+    ma, mb = np.asarray(a.mask), np.asarray(b.mask)
+    inter = np.asarray(C.intersect([a, b]).mask)
+    uni = np.asarray(C.union([a, b]).mask)
+    diff = np.asarray(C.difference(a, b).mask)
+    np.testing.assert_array_equal(inter, ma & mb)
+    np.testing.assert_array_equal(uni, ma | mb)
+    np.testing.assert_array_equal(diff, ma & ~mb)
+    # algebraic identities
+    np.testing.assert_array_equal(inter | np.asarray(C.difference(a, b).mask)
+                                  | np.asarray(C.difference(b, a).mask), uni)
+    # intersection subset of operands
+    assert not (inter & ~ma).any() and not (inter & ~mb).any()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(2, 5))
+def test_counter_counts(seed, n_sets):
+    rng = np.random.default_rng(seed)
+    sets = [_rs(rng) for _ in range(n_sets)]
+    counts = np.asarray(C.counter(sets).scores)
+    manual = sum(np.asarray(s.mask).astype(np.float32) for s in sets)
+    np.testing.assert_array_equal(counts, manual)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(1, N))
+def test_topk_selects_best(seed, k):
+    rng = np.random.default_rng(seed)
+    scores = rng.uniform(0, 10, N).astype(np.float32)
+    rs = C.topk_result(jnp.asarray(scores), k)
+    picked = np.nonzero(np.asarray(rs.mask))[0]
+    assert len(picked) <= k
+    if len(picked) and len(picked) < N:
+        unpicked_max = scores[~np.asarray(rs.mask)].max()
+        assert scores[picked].min() >= unpicked_max - 1e-6
+
+
+def test_commutativity_of_intersection():
+    rng = np.random.default_rng(0)
+    a, b, c = _rs(rng), _rs(rng), _rs(rng)
+    m1 = np.asarray(C.intersect([a, b, c]).mask)
+    m2 = np.asarray(C.intersect([c, a, b]).mask)
+    np.testing.assert_array_equal(m1, m2)

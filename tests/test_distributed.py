@@ -1,0 +1,86 @@
+"""Distributed seekers == local seekers (subprocess: needs 8 host devices,
+and jax locks the device count at first init in the main pytest process)."""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import AxisType
+    from repro.core.lake import joinable_lake, correlation_lake, mc_joinable_lake
+    from repro.core.index import build_index
+    from repro.core.executor import Executor
+    from repro.core import distributed as D
+    from repro.core.hashing import hash_array, row_superkey, split_u64
+    from repro.core import seekers as seek
+
+    mesh = jax.make_mesh((2,2,2), ("pod","data","model"),
+                         axis_types=(AxisType.Auto,)*3)
+
+    lake, query, _ = joinable_lake(n_tables=60, seed=1)
+    idx = build_index(lake); ex = Executor(idx)
+    h = hash_array(query); m_cap = ex._mcap_for(h)
+    ref, _ = seek.sc_seeker(ex.dev, jnp.asarray(h), jnp.ones(len(h), bool),
+                            m_cap=m_cap, n_tables=idx.n_tables,
+                            max_cols=idx.max_cols)
+    sharded = D.shard_device_index(idx, mesh)
+    fn = D.make_distributed_sc(mesh, m_cap=m_cap, n_tables=idx.n_tables,
+                               max_cols=idx.max_cols)
+    got, _ = fn(sharded, jnp.asarray(h), jnp.ones(len(h), bool))
+    assert bool(jnp.all(got == ref)), "SC mismatch"
+
+    fnk = D.make_distributed_kw(mesh, m_cap=m_cap, n_tables=idx.n_tables)
+    gotk, _ = fnk(sharded, jnp.asarray(h), jnp.ones(len(h), bool))
+    refk, _ = seek.kw_seeker(ex.dev, jnp.asarray(h), jnp.ones(len(h), bool),
+                             m_cap=m_cap, n_tables=idx.n_tables)
+    assert bool(jnp.all(gotk == refk)), "KW mismatch"
+
+    lake3, keys, target, _ = correlation_lake(n_tables=30, seed=3)
+    idx3 = build_index(lake3); ex3 = Executor(idx3)
+    h3 = hash_array(keys); m3 = ex3._mcap_for(h3)
+    tgt = np.array([float(v) for v in target])
+    qb = (tgt >= tgt.mean()).astype(np.int8)
+    ref3, _ = seek.c_seeker(ex3.dev, jnp.asarray(h3), jnp.ones(len(h3), bool),
+                            jnp.asarray(qb), m_cap=m3, row_cap=8,
+                            n_tables=idx3.n_tables, max_cols=idx3.max_cols,
+                            h_sample=256, row_stride=idx3.row_stride)
+    sh3 = D.shard_device_index(idx3, mesh)
+    fn3 = D.make_distributed_c(mesh, m_cap=m3, row_cap=8,
+                               n_tables=idx3.n_tables, max_cols=idx3.max_cols,
+                               h_sample=256, row_stride=idx3.row_stride)
+    got3, _ = fn3(sh3, jnp.asarray(h3), jnp.ones(len(h3), bool), jnp.asarray(qb))
+    assert float(jnp.max(jnp.abs(got3 - ref3))) < 1e-6, "C mismatch"
+
+    lake2, tuples, truth2 = mc_joinable_lake(n_tables=40, seed=2)
+    idx2 = build_index(lake2)
+    th = np.stack([hash_array([t[c] for t in tuples]) for c in range(2)], 1)
+    counts = np.stack([idx2.host_counts(th[:, c]) for c in range(2)], 1)
+    init_col = np.argmin(counts, 1).astype(np.int32)
+    qks = np.array([row_superkey(th[i], np.zeros(2, np.int64))
+                    for i in range(len(tuples))], np.uint64)
+    lo, hi = split_u64(qks)
+    sh2 = D.shard_device_index(idx2, mesh)
+    fn2 = D.make_distributed_mc(mesh, m_cap=64, n_tables=idx2.n_tables,
+                                n_cols=2, row_stride=idx2.row_stride)
+    got2, _ = fn2(sh2, jnp.asarray(th), jnp.asarray(init_col),
+                  jnp.asarray(lo), jnp.asarray(hi))
+    assert np.array_equal(np.asarray(got2).astype(int), truth2), "MC mismatch"
+    print("DISTRIBUTED_OK")
+""")
+
+
+@pytest.mark.slow
+def test_distributed_seekers_match_local():
+    env = {**os.environ, "PYTHONPATH": str(REPO / "src")}
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "DISTRIBUTED_OK" in r.stdout

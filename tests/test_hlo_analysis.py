@@ -1,0 +1,89 @@
+"""Unit tests for the trip-count-aware HLO analyzer (the §Roofline source)."""
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import hlo_analysis as H
+
+HLO = textwrap.dedent("""
+    HloModule test, num_partitions=4
+
+    %body (p: (s32[], f32[64,64])) -> (s32[], f32[64,64]) {
+      %p = (s32[], f32[64,64]{1,0}) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[64,64]{1,0} get-tuple-element(%p), index=1
+      %one = s32[] constant(1)
+      %i2 = s32[] add(%i, %one)
+      %w = f32[64,64]{1,0} constant({...})
+      %dot.1 = f32[64,64]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[64,64]{1,0} all-reduce(%dot.1), replica_groups={}, to_apply=%add
+      ROOT %t = (s32[], f32[64,64]{1,0}) tuple(%i2, %ar)
+    }
+
+    %cond (p2: (s32[], f32[64,64])) -> pred[] {
+      %p2 = (s32[], f32[64,64]{1,0}) parameter(0)
+      %i3 = s32[] get-tuple-element(%p2), index=0
+      %n = s32[] constant(7)
+      ROOT %lt = pred[] compare(%i3, %n), direction=LT
+    }
+
+    ENTRY %main (a: f32[64,64]) -> f32[64,64] {
+      %a = f32[64,64]{1,0} parameter(0)
+      %zero = s32[] constant(0)
+      %init = (s32[], f32[64,64]{1,0}) tuple(%zero, %a)
+      %while.1 = (s32[], f32[64,64]{1,0}) while(%init), condition=%cond, body=%body
+      %dot.2 = f32[64,64]{1,0} dot(%a, %a), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      ROOT %out = f32[64,64]{1,0} get-tuple-element(%while.1), index=1
+    }
+""")
+
+
+def test_trip_count_multiplication():
+    a = H.analyze(HLO)
+    per_dot = 2 * 64 * 64 * 64
+    # dot.1 runs 7x (while trip count), dot.2 once
+    assert a["flops"] == 8 * per_dot
+    # all-reduce inside the loop: 7 x result bytes
+    assert a["collective_bytes"]["all-reduce"] == 7 * 64 * 64 * 4
+
+
+def test_known_trip_count_backend_config():
+    txt = HLO.replace(
+        "condition=%cond, body=%body",
+        'condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"12"}}')
+    a = H.analyze(txt)
+    per_dot = 2 * 64 * 64 * 64
+    assert a["flops"] == 13 * per_dot       # backend_config wins over the cond
+
+
+def test_roofline_term_conventions():
+    analysis = {"flops": 197e12, "hbm_bytes": 819e9,
+                "collective_bytes": {"all-reduce": 25e9, "all-gather": 50e9,
+                                     "reduce-scatter": 1e9, "all-to-all": 0,
+                                     "collective-permute": 0},
+                "collective_bytes_total": 76e9}
+    t = H.roofline_terms(analysis, chips=4, link_bw=50e9)
+    assert abs(t["compute_s"] - 1.0) < 1e-9
+    assert abs(t["memory_s"] - 1.0) < 1e-9
+    # 2x25 + 50 + 4x1 = 104 GB over 50 GB/s
+    assert abs(t["collective_s"] - 104e9 / 50e9) < 1e-9
+
+
+def test_against_real_compiled_module():
+    """Cross-check the parser against a real XLA-compiled scan: flops must
+    scale linearly with the scan length (which cost_analysis gets wrong)."""
+    def f(x, ws):
+        y, _ = jax.lax.scan(lambda c, w: (jnp.tanh(c @ w), None), x, ws)
+        return y
+
+    x = jnp.ones((32, 32))
+    flops = {}
+    for L in (2, 8):
+        ws = jnp.ones((L, 32, 32))
+        txt = jax.jit(f).lower(x, ws).compile().as_text()
+        flops[L] = H.analyze(txt)["flops"]
+    per = 2 * 32 * 32 * 32
+    assert flops[2] == 2 * per
+    assert flops[8] == 8 * per

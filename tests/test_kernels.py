@@ -1,0 +1,135 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret-mode vs pure-jnp
+oracle (assert_allclose), plus hypothesis properties."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.bucket_probe import ops as bp
+from repro.kernels.bucket_probe.ref import bucket_probe_ref
+from repro.kernels.flash_attention import ops as fa
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.qcr_score import ops as qc
+from repro.kernels.qcr_score.ref import qcr_score_ref
+from repro.kernels.superkey_filter import ops as sk
+from repro.kernels.superkey_filter.ref import superkey_filter_ref
+
+
+def _bucket_table(rng, bits, width):
+    nb = 1 << bits
+    bh = rng.integers(0, 2 ** 32, (nb, width), dtype=np.uint32)
+    for b in range(nb):   # top bits must equal the bucket id
+        bh[b] = (np.uint32(b) << np.uint32(32 - bits)) | \
+            (bh[b] & np.uint32((1 << (32 - bits)) - 1))
+    bp_ = rng.integers(0, 10 ** 6, (nb, width), dtype=np.int32)
+    return bh, bp_
+
+
+@pytest.mark.parametrize("bits,width,m", [(4, 8, 32), (6, 16, 64),
+                                          (8, 128, 128)])
+def test_bucket_probe_sweep(bits, width, m):
+    rng = np.random.default_rng(bits * 100 + width)
+    bh, payload = _bucket_table(rng, bits, width)
+    q = bh[rng.integers(0, 1 << bits, m), rng.integers(0, width, m)]
+    want = bucket_probe_ref(jnp.asarray(bh), jnp.asarray(payload),
+                            jnp.asarray(q), bits)
+    got = bp.probe(jnp.asarray(bh), jnp.asarray(payload), jnp.asarray(q),
+                   bits, use_kernel=True, interpret=True, q_block=16)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_bucket_probe_misses():
+    rng = np.random.default_rng(0)
+    bh, payload = _bucket_table(rng, 5, 8)
+    q = np.zeros(16, np.uint32)      # most likely all misses
+    got = bp.probe(jnp.asarray(bh), jnp.asarray(payload), jnp.asarray(q), 5,
+                   use_kernel=True, interpret=True, q_block=16)
+    want = bucket_probe_ref(jnp.asarray(bh), jnp.asarray(payload),
+                            jnp.asarray(q), 5)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n,t", [(1024, 4), (2048, 8), (3000, 5)])
+def test_superkey_sweep(n, t):
+    rng = np.random.default_rng(n + t)
+    sk_lo = rng.integers(0, 2 ** 32, n, dtype=np.uint32)
+    sk_hi = rng.integers(0, 2 ** 32, n, dtype=np.uint32)
+    # half of the queries are guaranteed-contained digests
+    q_lo = np.concatenate([sk_lo[:t // 2] & rng.integers(0, 2 ** 32, t // 2,
+                                                         dtype=np.uint32),
+                           rng.integers(0, 2 ** 32, t - t // 2,
+                                        dtype=np.uint32)])
+    q_hi = rng.integers(0, 2 ** 32, t, dtype=np.uint32)
+    want = superkey_filter_ref(*map(jnp.asarray, (sk_lo, sk_hi, q_lo, q_hi)))
+    got = sk.filter_rows(*map(jnp.asarray, (sk_lo, sk_hi, q_lo, q_hi)),
+                         use_kernel=True, interpret=True, t_block=4,
+                         n_block=512)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_superkey_containment_property(seed):
+    """(a | b) always contains a — kernel must agree."""
+    rng = np.random.default_rng(seed)
+    a_lo = rng.integers(0, 2 ** 32, 256, dtype=np.uint32)
+    a_hi = rng.integers(0, 2 ** 32, 256, dtype=np.uint32)
+    b_lo = rng.integers(0, 2 ** 32, 256, dtype=np.uint32)
+    row_lo, row_hi = a_lo | b_lo, a_hi
+    got = sk.filter_rows(jnp.asarray(row_lo), jnp.asarray(row_hi),
+                         jnp.asarray(a_lo[:4]), jnp.asarray(a_hi[:4]),
+                         use_kernel=True, interpret=True, t_block=4,
+                         n_block=256)
+    # query digest i is contained in row i by construction
+    for i in range(4):
+        assert bool(got[i, i])
+
+
+@pytest.mark.parametrize("g,h", [(64, 32), (128, 64), (200, 128)])
+def test_qcr_sweep(g, h):
+    rng = np.random.default_rng(g + h)
+    quad = rng.integers(0, 2, (g, h)).astype(np.int8)
+    qb = rng.integers(0, 2, (g, h)).astype(np.int8)
+    val = rng.random((g, h)) < 0.6
+    want = qcr_score_ref(jnp.asarray(quad), jnp.asarray(qb), jnp.asarray(val))
+    got = qc.score(jnp.asarray(quad), jnp.asarray(qb), jnp.asarray(val),
+                   use_kernel=True, interpret=True, g_block=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_qcr_perfect_correlation():
+    quad = np.ones((8, 64), np.int8)
+    qb = np.ones((8, 64), np.int8)
+    val = np.ones((8, 64), bool)
+    got = qc.score(jnp.asarray(quad), jnp.asarray(qb), jnp.asarray(val),
+                   use_kernel=True, interpret=True, g_block=8)
+    np.testing.assert_allclose(np.asarray(got), 1.0)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("s,h,k,d,causal", [
+    (128, 2, 1, 64, True), (256, 4, 2, 64, True), (256, 2, 2, 128, False)])
+def test_flash_attention_sweep(s, h, k, d, causal, dtype):
+    rng = np.random.default_rng(s + h + d)
+    B = 2
+    q = jnp.asarray(rng.normal(0, 1, (B, s, h, d)), dtype)
+    kk = jnp.asarray(rng.normal(0, 1, (B, s, k, d)), dtype)
+    v = jnp.asarray(rng.normal(0, 1, (B, s, k, d)), dtype)
+    want = attention_ref(q, kk, v, causal=causal)
+    got = fa.attention(q, kk, v, causal=causal, use_kernel=True,
+                       interpret=True, q_block=128, kv_block=128)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+def test_flash_matches_model_chunked_path():
+    """The Pallas kernel and the model-side pure-JAX chunked attention agree."""
+    from repro.models.attention import chunked_attention
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(0, 1, (1, 256, 4, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (1, 256, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (1, 256, 2, 64)), jnp.float32)
+    a = chunked_attention(q, k, v, q_chunk=64, kv_chunk=64, causal=True)
+    b = fa.attention(q, k, v, causal=True, use_kernel=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)

@@ -1,0 +1,142 @@
+"""Optimizer: EG identification, ranking rules, Theorem 1 (output
+preservation) as a hypothesis property over random plans."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost_model import RULE_RANK
+from repro.core.executor import Executor
+from repro.core.index import build_index
+from repro.core.lake import synthetic_lake
+from repro.core.optimizer import identify_groups, optimize, rank_seekers
+from repro.core.plan import Combiners, Plan, Seekers
+
+
+def _mk_plan(lake, rng, n_seekers, combiner_kind):
+    plan = Plan()
+    names = []
+    for i in range(n_seekers):
+        t = lake.tables[int(rng.integers(0, lake.n_tables))]
+        n = int(rng.integers(2, 8))
+        rows = rng.choice(t.n_rows, n, replace=False)
+        kind = rng.choice(["SC", "KW", "MC"])
+        if kind == "SC":
+            spec = Seekers.SC([t.columns[0][r] for r in rows], k=20)
+        elif kind == "KW":
+            spec = Seekers.KW([t.columns[1][r] for r in rows], k=20)
+        else:
+            spec = Seekers.MC([(t.columns[0][r], t.columns[1][r])
+                               for r in rows], k=20)
+        plan.add(f"s{i}", spec)
+        names.append(f"s{i}")
+    comb = {"intersect": Combiners.Intersect, "union": Combiners.Union,
+            "counter": Combiners.Counter}[combiner_kind]
+    plan.add("out", comb(k=10), names)
+    return plan
+
+
+def test_eg_identification():
+    plan = Plan()
+    plan.add("a", Seekers.SC(["x"], k=5))
+    plan.add("b", Seekers.KW(["y"], k=5))
+    plan.add("c", Seekers.MC([("x", "y")], k=5))
+    plan.add("i", Combiners.Intersect(k=5), ["a", "b", "c"])
+    plan.add("u", Combiners.Union(k=5), ["i", "a"])
+    groups = identify_groups(plan)
+    assert set(groups) == {"i"}
+    assert set(groups["i"].seekers) == {"a", "b", "c"}
+
+
+def test_rules_order():
+    plan = Plan()
+    plan.add("mc", Seekers.MC([("x", "y")], k=5))
+    plan.add("c", Seekers.Correlation(["x"], [1.0], k=5))
+    plan.add("sc", Seekers.SC(["x"], k=5))
+    plan.add("kw", Seekers.KW(["x"], k=5))
+    plan.add("i", Combiners.Intersect(k=5), ["mc", "c", "sc", "kw"])
+    stats = lambda spec: (1.0, spec.n_cols, 1.0)
+    order = rank_seekers(plan, ["mc", "c", "sc", "kw"], stats, None)
+    kinds = [plan.nodes[n].spec.kind for n in order]
+    assert kinds == ["KW", "SC", "C", "MC"]      # Rules 1-3
+    assert [RULE_RANK[k] for k in kinds] == sorted(RULE_RANK[k] for k in kinds)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(2, 4),
+       st.sampled_from(["union", "counter"]))
+def test_theorem1_exact_for_union_counter(seed, n_seekers, comb):
+    """Union/Counter get no rewriting: optimized == naive exactly."""
+    rng = np.random.default_rng(seed)
+    lake = synthetic_lake(n_tables=40, rows=16, vocab=300, seed=seed % 97)
+    ex = Executor(build_index(lake))
+    plan = _mk_plan(lake, rng, n_seekers, comb)
+    rs_opt, _ = ex.run(plan, optimize=True)
+    rs_no, _ = ex.run(plan, optimize=False)
+    assert set(rs_opt.ids().tolist()) == set(rs_no.ids().tolist())
+    np.testing.assert_allclose(np.asarray(rs_opt.scores),
+                               np.asarray(rs_no.scores), rtol=1e-6)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(2, 4))
+def test_theorem1_soundness_for_intersection(seed, n_seekers):
+    """Theorem 1 under filtered-top-k semantics (see DESIGN.md): the
+    rewritten intersection (a) never loses a table the naive plan returns
+    before the final cut, and (b) never admits a table that fails any
+    seeker's criterion.  (Exact set equality does not hold in general because
+    per-seeker LIMIT K does not commute with the threaded predicate — the
+    paper's SQL rewriting has the same property.)"""
+    rng = np.random.default_rng(seed)
+    lake = synthetic_lake(n_tables=40, rows=16, vocab=300, seed=seed % 97)
+    ex = Executor(build_index(lake))
+    plan = _mk_plan(lake, rng, n_seekers, "intersect")
+    # pre-cut comparison: lift the final combiner k so the cut doesn't hide
+    # the containment property
+    plan.nodes["out"].spec = type(plan.nodes["out"].spec)("intersect",
+                                                          lake.n_tables)
+    rs_opt, _ = ex.run(plan, optimize=True)
+    rs_no, _ = ex.run(plan, optimize=False)
+    opt_ids = set(rs_opt.ids().tolist())
+    no_ids = set(rs_no.ids().tolist())
+    assert no_ids <= opt_ids                       # (a) nothing lost
+    # (b) every extra table genuinely satisfies all seeker criteria
+    for name, node in plan.nodes.items():
+        if not node.is_seeker:
+            continue
+        full = ex.run_seeker(node.spec._replace_k(lake.n_tables)
+                             if hasattr(node.spec, "_replace_k")
+                             else _with_k(node.spec, lake.n_tables))
+        scores = np.asarray(full.scores)
+        for t in opt_ids:
+            assert scores[t] > 0, (name, t)
+
+
+def _with_k(spec, k):
+    import dataclasses
+    return dataclasses.replace(spec, k=k)
+
+
+def test_theorem1_difference_rewriting(small_lake, small_executor):
+    t0, t1 = small_lake.tables[0], small_lake.tables[1]
+    plan = Plan()
+    plan.add("pos", Seekers.MC([(t0.columns[0][r], t0.columns[1][r])
+                                for r in range(6)], k=30))
+    plan.add("neg", Seekers.MC([(t1.columns[0][r], t1.columns[1][r])
+                                for r in range(6)], k=30))
+    plan.add("out", Combiners.Difference(k=10), ["pos", "neg"])
+    rs_opt, info_opt = small_executor.run(plan, optimize=True)
+    rs_no, _ = small_executor.run(plan, optimize=False)
+    assert set(rs_opt.ids().tolist()) == set(rs_no.ids().tolist())
+
+
+def test_grammar_validation():
+    import pytest
+    plan = Plan()
+    plan.add("a", Seekers.SC(["x"], k=5))
+    with pytest.raises(ValueError):
+        plan.add("bad", Combiners.Intersect(k=5), ["a"])       # < 2 inputs
+    plan.add("b", Seekers.SC(["y"], k=5))
+    plan.add("c", Seekers.SC(["z"], k=5))
+    with pytest.raises(ValueError):
+        plan.add("bad2", Combiners.Difference(k=5), ["a", "b", "c"])
+    with pytest.raises(ValueError):
+        plan.add("bad3", Combiners.Union(k=5), ["a", "missing"])

@@ -1,0 +1,141 @@
+"""Seeker correctness against brute-force oracles (unit + hypothesis)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import brute_force_kw, brute_force_mc, brute_force_sc
+from repro.core import seekers as seek
+from repro.core.executor import Executor
+from repro.core.hashing import hash_array
+from repro.core.index import build_index
+from repro.core.lake import (DataLake, Table, correlation_lake, joinable_lake,
+                             mc_joinable_lake, synthetic_lake)
+from repro.core.plan import Seekers
+
+
+def raw_sc_scores(ex, values):
+    h = hash_array(values)
+    scores, ovf = seek.sc_seeker(
+        ex.dev, jnp.asarray(h), jnp.ones(len(h), bool),
+        m_cap=ex._mcap_for(h), n_tables=ex.n_tables, max_cols=ex.max_cols)
+    return np.asarray(scores), int(ovf)
+
+
+def test_sc_exact_vs_bruteforce(small_lake, small_executor):
+    vals = [small_lake.tables[0].columns[0][i] for i in range(10)]
+    got, ovf = raw_sc_scores(small_executor, vals)
+    assert ovf == 0
+    np.testing.assert_array_equal(got, brute_force_sc(small_lake, vals))
+
+
+def test_sc_controlled_overlap():
+    lake, query, truth = joinable_lake(n_tables=80, seed=11)
+    ex = Executor(build_index(lake))
+    got, _ = raw_sc_scores(ex, query)
+    # truth counts only the planted column; other columns may coincidentally
+    # overlap, so got >= truth and got matches full brute force
+    np.testing.assert_array_equal(got, brute_force_sc(lake, query))
+    assert (got >= truth).all()
+
+
+def test_kw_exact(small_lake, small_executor):
+    vals = [small_lake.tables[1].columns[0][i] for i in range(8)]
+    h = hash_array(vals)
+    scores, _ = seek.kw_seeker(
+        small_executor.dev, jnp.asarray(h), jnp.ones(len(h), bool),
+        m_cap=small_executor._mcap_for(h), n_tables=small_lake.n_tables)
+    np.testing.assert_array_equal(np.asarray(scores),
+                                  brute_force_kw(small_lake, vals))
+
+
+def test_mc_exact_and_alignment():
+    lake, tuples, truth = mc_joinable_lake(seed=4)
+    ex = Executor(build_index(lake))
+    rs = ex.run_seeker(Seekers.MC(tuples, k=lake.n_tables))
+    got = np.asarray(rs.scores).astype(int)
+    np.testing.assert_array_equal(got, brute_force_mc(lake, tuples))
+    # misaligned tables (mode 2) must score zero
+    np.testing.assert_array_equal(got, truth)
+
+
+def test_mc_superkey_is_pure_filter(small_lake, small_executor):
+    """The bloom prune never changes the final (validated) result."""
+    t0 = small_lake.tables[0]
+    tuples = [(t0.columns[0][r], t0.columns[1][r]) for r in range(6)]
+    from repro.core.hashing import row_superkey, split_u64
+    th = np.stack([hash_array([t[c] for t in tuples]) for c in range(2)], 1)
+    counts = np.stack([small_executor.index.host_counts(th[:, c])
+                       for c in range(2)], 1)
+    init = np.argmin(counts, 1).astype(np.int32)
+    qks = np.array([row_superkey(th[i], np.zeros(2, np.int64))
+                    for i in range(len(tuples))], np.uint64)
+    lo, hi = split_u64(qks)
+    kw = dict(m_cap=64, n_tables=small_lake.n_tables, n_cols=2,
+              row_stride=small_executor.index.row_stride)
+    with_sk, _, _ = seek.mc_seeker(small_executor.dev, jnp.asarray(th),
+                                   jnp.asarray(init), jnp.asarray(lo),
+                                   jnp.asarray(hi), use_superkey=True, **kw)
+    without, _, _ = seek.mc_seeker(small_executor.dev, jnp.asarray(th),
+                                   jnp.asarray(init), jnp.asarray(lo),
+                                   jnp.asarray(hi), use_superkey=False, **kw)
+    np.testing.assert_array_equal(np.asarray(with_sk), np.asarray(without))
+
+
+def test_correlation_ranks_high_corr_tables():
+    lake, keys, target, truth = correlation_lake(n_tables=40, seed=9)
+    ex = Executor(build_index(lake))
+    ids = ex.run_seeker(Seekers.Correlation(keys, target, k=10, h=512)).ids()
+    top_truth = truth[ids[:5]]
+    assert top_truth.mean() > 0.75, top_truth
+
+
+def test_correlation_numeric_join_keys():
+    """BLEND supports numeric join keys (the baseline does not)."""
+    lake, keys, target, truth = correlation_lake(n_tables=30, seed=10,
+                                                 numeric_join_keys=True)
+    ex = Executor(build_index(lake))
+    ids = ex.run_seeker(Seekers.Correlation(keys, target, k=5, h=512)).ids()
+    assert len(ids) > 0
+    assert truth[ids[:3]].mean() > 0.6
+
+
+def test_allowed_mask_is_exact_restriction(small_lake, small_executor):
+    """Mask threading == post-hoc filtering (the rewriting soundness core)."""
+    vals = [small_lake.tables[2].columns[1][i] for i in range(12)]
+    full, _ = raw_sc_scores(small_executor, vals)
+    allowed = np.zeros(small_lake.n_tables, bool)
+    allowed[::3] = True
+    h = hash_array(vals)
+    got, _ = seek.sc_seeker(
+        small_executor.dev, jnp.asarray(h), jnp.ones(len(h), bool),
+        m_cap=small_executor._mcap_for(h), n_tables=small_lake.n_tables,
+        max_cols=small_executor.max_cols, allowed=jnp.asarray(allowed))
+    np.testing.assert_array_equal(np.asarray(got), np.where(allowed, full, 0))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 12))
+def test_sc_property_random_lakes(seed, nq):
+    """Property: SC seeker == brute force on arbitrary random lakes."""
+    rng = np.random.default_rng(seed)
+    tables = []
+    for t in range(10):
+        nr = int(rng.integers(3, 12))
+        cols = [[f"v{int(x)}" for x in rng.integers(0, 40, nr)]
+                for _ in range(int(rng.integers(1, 4)))]
+        tables.append(Table(f"t{t}", cols))
+    lake = DataLake(tables)
+    ex = Executor(build_index(lake))
+    vals = sorted({f"v{int(x)}" for x in rng.integers(0, 40, nq)})
+    got, ovf = raw_sc_scores(ex, vals)
+    assert ovf == 0
+    np.testing.assert_array_equal(got, brute_force_sc(lake, vals))
+
+
+def test_overflow_is_reported():
+    lake = synthetic_lake(n_tables=30, rows=30, vocab=3, seed=1)  # tiny vocab
+    ex = Executor(build_index(lake), m_cap_max=8)
+    vals = [f"tok_{i}" for i in range(3)]
+    got, ovf = raw_sc_scores(ex, vals)
+    assert ovf > 0          # capacity clipped, surfaced not silent

@@ -1,0 +1,91 @@
+"""Property tests for the sharding rules (pure: no device state needed)."""
+import math
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCH_IDS, get_config
+from repro.dist.sharding import param_specs
+from repro.models import registry
+
+
+class FakeMesh:
+    """Duck-typed mesh (axis sizes only) so the rules run without devices."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+        self.size = math.prod(shape.values())
+
+
+MESHES = [FakeMesh({"data": 16, "model": 16}),
+          FakeMesh({"pod": 2, "data": 16, "model": 16}),
+          FakeMesh({"data": 4, "model": 2})]
+
+
+def _axis_size(mesh, entry):
+    n = 1
+    for a in (entry if isinstance(entry, tuple) else (entry,)):
+        if a is not None:
+            n *= mesh.shape[a]
+    return n
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("mesh", MESHES, ids=["1pod", "2pod", "tiny"])
+def test_param_specs_always_divisible(arch, mesh):
+    """Every assigned axis evenly divides its dim (jit input requirement),
+    for every arch x mesh, with and without fsdp/expert_data_shard."""
+    cfg = get_config(arch)
+    tree = registry.param_specs_tree(cfg)
+    for fsdp in (False, True):
+        for eds in (False, True):
+            specs = param_specs(tree, mesh, fsdp=fsdp, expert_data_shard=eds)
+
+            def check(leaf, spec):
+                for dim, entry in zip(leaf.shape, tuple(spec)):
+                    n = _axis_size(mesh, entry)
+                    assert dim % n == 0, (arch, leaf.shape, tuple(spec))
+                return 0
+
+            jax.tree.map(check, tree, specs,
+                         is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def test_fsdp_shards_large_params():
+    cfg = get_config("arctic-480b")
+    tree = registry.param_specs_tree(cfg)
+    mesh = MESHES[0]
+    specs = param_specs(tree, mesh, fsdp=True)
+
+    def bytes_per_device(leaf, spec):
+        n = 1
+        for dim, entry in zip(leaf.shape, tuple(spec)):
+            n *= _axis_size(mesh, entry)
+        return math.prod(leaf.shape) * leaf.dtype.itemsize / n
+
+    total = sum(jax.tree.leaves(jax.tree.map(
+        bytes_per_device, tree, specs, is_leaf=lambda x: hasattr(x, "shape"))))
+    # 480B bf16 params over 256 devices must land well under 16 GB/device
+    assert total < 6e9, total / 1e9
+
+
+def test_expert_data_shard_places_experts_on_data():
+    cfg = get_config("arctic-480b")
+    tree = registry.param_specs_tree(cfg)
+    specs = param_specs(tree, MESHES[0], expert_data_shard=True)
+    eg = specs["layers"]["moe"]["experts_gate"]
+    assert tuple(eg) == (None, "data", None, "model")
+    ed = specs["layers"]["moe"]["experts_down"]
+    assert tuple(ed) == (None, "data", "model", None)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 6))
+def test_batch_spec_shards_when_divisible(logd, logm):
+    from repro.dist.sharding import batch_spec
+    mesh = FakeMesh({"data": 2 ** logd, "model": 2 ** logm})
+    spec = batch_spec(mesh, ndim=2)
+    assert tuple(spec)[0] in ("data", ("data",))
