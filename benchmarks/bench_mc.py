@@ -31,7 +31,7 @@ def main():
 
     def blend_run():
         scores, rows, ovf = seek.mc_seeker(
-            ex.dev, jnp.asarray(th), jnp.asarray(init), jnp.asarray(lo),
+            ex.engine, jnp.asarray(th), jnp.asarray(init), jnp.asarray(lo),
             jnp.asarray(hi), m_cap=ex._mcap_for(th[:, 0]),
             n_tables=idx.n_tables, n_cols=n_cols, row_stride=idx.row_stride)
         scores.block_until_ready()

@@ -57,6 +57,18 @@ def main():
         blend_ids = set(ex.run_seeker(spec).ids().tolist())
         josie_ids = set(josie.query(vals, k=10))
         out[qsize]["results_equal"] = blend_ids == josie_ids
+
+        # repeated-query latency: a *fresh* value set per call, same capacity
+        # bucket — the retrace-free serving path (quantized capacities +
+        # padded query shapes) must hit the jit cache every time
+        def fresh_query():
+            vs = [vocab_vals[i] for i in rng.choice(4000, qsize,
+                                                    replace=False)]
+            return ex.run_seeker(Seekers.SC(vs, k=10))
+        t_rep, _ = timeit(fresh_query, warmup=1, iters=5)
+        out[qsize]["blend_repeat_s"] = t_rep
+        row(f"sc_join/q{qsize}/blend_repeat", t_rep * 1e6,
+            f"fresh values per call, retrace-free")
     save_json("fig5_sc_join", out)
     return out
 

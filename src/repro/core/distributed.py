@@ -25,6 +25,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import seekers as seek
+from repro.core.match import probe_sorted, sorted_member
 
 IDX_KEYS_MAIN = ("hash", "table", "col", "row", "sk_lo", "sk_hi", "quadrant",
                  "rank_conv", "rank_rand")
@@ -91,7 +92,7 @@ def make_distributed_sc(mesh, *, m_cap, n_tables, max_cols):
                        in_specs=(idx_specs, P(), P()), out_specs=P(),
                        check_rep=False)
     def run(idx, q_hash, q_mask):
-        pidx, valid, ovf = seek._expand_matches(idx["hash"], q_hash, q_mask,
+        pidx, valid, ovf = probe_sorted(idx["hash"], q_hash, q_mask,
                                                 m_cap)
         t = idx["table"][pidx]
         c = idx["col"][pidx]
@@ -115,7 +116,7 @@ def make_distributed_kw(mesh, *, m_cap, n_tables):
                        in_specs=(idx_specs, P(), P()), out_specs=P(),
                        check_rep=False)
     def run(idx, q_hash, q_mask):
-        pidx, valid, ovf = seek._expand_matches(idx["hash"], q_hash, q_mask,
+        pidx, valid, ovf = probe_sorted(idx["hash"], q_hash, q_mask,
                                                 m_cap)
         t = idx["table"][pidx]
         contrib = valid & seek._first_occurrence(t)
@@ -140,7 +141,7 @@ def make_distributed_c(mesh, *, m_cap, row_cap, n_tables, max_cols, h_sample,
                        in_specs=(idx_specs, P(), P(), P()), out_specs=P(),
                        check_rep=False)
     def run(idx, qj_hash, q_mask, q_bit):
-        pidx, valid, ovf = seek._expand_matches(idx["hash"], qj_hash, q_mask,
+        pidx, valid, ovf = probe_sorted(idx["hash"], qj_hash, q_mask,
                                                 m_cap)
         t = idx["table"][pidx]
         r = idx["row"][pidx]
@@ -195,7 +196,7 @@ def make_distributed_mc(mesh, *, m_cap, n_tables, n_cols, row_stride):
         nt = tuple_hashes.shape[0]
         h0 = jnp.take_along_axis(tuple_hashes, init_col[:, None], 1)[:, 0]
         q_mask = jnp.ones((nt,), bool)
-        pidx, valid, ovf = seek._expand_matches(idx["hash"], h0, q_mask, m_cap)
+        pidx, valid, ovf = probe_sorted(idx["hash"], h0, q_mask, m_cap)
         t = idx["table"][pidx]
         r = idx["row"][pidx]
         bloom = ((idx["sk_lo"][pidx] & qk_lo[:, None]) == qk_lo[:, None]) & \
@@ -209,14 +210,12 @@ def make_distributed_mc(mesh, *, m_cap, n_tables, n_cols, row_stride):
         # local membership of each tuple column at the candidate rows
         members = []
         for j in range(n_cols):
-            pj, vj, _ = seek._expand_matches(idx["hash"], tuple_hashes[:, j],
+            pj, vj, _ = probe_sorted(idx["hash"], tuple_hashes[:, j],
                                              q_mask, m_cap)
             rkj = idx["table"][pj].astype(jnp.int32) * row_stride + \
                 idx["row"][pj].astype(jnp.int32)
             rkj = jnp.sort(jnp.where(vj, rkj, jnp.iinfo(jnp.int32).max), axis=1)
-            loc = jax.vmap(jnp.searchsorted)(rkj, g_rk)
-            loc = jnp.clip(loc, 0, m_cap - 1)
-            hit = jnp.take_along_axis(rkj, loc, axis=1) == g_rk
+            hit = sorted_member(rkj, g_rk)
             members.append(jax.lax.psum(hit.astype(jnp.int32), axes) > 0)
         ok = g_rk >= 0
         for j in range(n_cols):
@@ -322,7 +321,7 @@ def make_distributed_c_topk(mesh, *, m_cap, row_cap, n_tables, max_cols,
                        in_specs=(idx_specs, P(), P(), P()), out_specs=(P(), P()),
                        check_rep=False)
     def run(idx, qj_hash, q_mask, q_bit):
-        pidx, valid, ovf = seek._expand_matches(idx["hash"], qj_hash, q_mask,
+        pidx, valid, ovf = probe_sorted(idx["hash"], qj_hash, q_mask,
                                                 m_cap)
         t = idx["table"][pidx]
         r = idx["row"][pidx]

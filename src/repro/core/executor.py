@@ -1,10 +1,18 @@
 """Plan executor: optimized (EG ordering + mask threading) and naive (B-NO).
 
-The executor owns the device-resident index arrays, hashes query values,
-chooses static match capacities from host-side planner statistics, and runs
-the plan DAG.  ``optimize=False`` reproduces the paper's B-NO configuration:
-same seekers and combiners, random/insertion seeker order, no intermediate-
-result threading.
+The executor owns a ``MatchEngine`` (device index + probe backends), hashes
+query values through a cross-query memo cache, and runs the plan DAG.
+``optimize=False`` reproduces the paper's B-NO configuration: same seekers
+and combiners, random/insertion seeker order, no intermediate-result
+threading.
+
+Serving is retrace-free: match capacities are quantized to a small fixed
+ladder and query counts are padded to powers of two, so re-running any plan
+shape with new values of the same capacity bucket hits the jit cache (zero
+new traces — asserted against ``seekers.TRACE_COUNTS``).  ``sync=False``
+dispatches seekers without host synchronization (no ``block_until_ready``,
+no data-dependent compaction stages) for batched serving
+(serve/engine.py ``serve_many``).
 """
 from __future__ import annotations
 
@@ -18,10 +26,18 @@ import numpy as np
 from repro.core import combiners as comb
 from repro.core import seekers as seek
 from repro.core.cost_model import CostModel
-from repro.core.hashing import hash_array, hash_value, row_superkey, split_u64
+from repro.core.hashing import MISSING, hash_value, row_superkey, split_u64
 from repro.core.index import UnifiedIndex
+from repro.core.match import MatchEngine
 from repro.core.optimizer import optimize as optimize_plan
 from repro.core.plan import Plan, SeekerSpec
+
+# the match-capacity ladder: every seeker launch uses one of these static
+# capacities, so the jit cache holds at most len(CAP_LADDER) variants per
+# (seeker, query-pad) shape instead of one per observed match count — and a
+# coarse ladder keeps the bucket stable across draws from the same workload
+CAP_LADDER = (32, 128, 512, 1024)
+PAD_SENTINEL = MISSING                    # reserved: never a real cell hash
 
 
 @dataclass
@@ -29,11 +45,16 @@ class ExecInfo:
     optimized: bool
     node_seconds: dict = field(default_factory=dict)
     order: list = field(default_factory=list)
-    overflow: int = 0
+    overflow_parts: list = field(default_factory=list)
 
     @property
     def total_seconds(self) -> float:
         return sum(self.node_seconds.values())
+
+    @property
+    def overflow(self) -> int:
+        # reading this synchronizes on the dispatched seekers
+        return int(sum(int(np.asarray(p)) for p in self.overflow_parts))
 
 
 def _pow2_at_least(n: int, lo: int = 8, hi: int = 1024) -> int:
@@ -45,19 +66,57 @@ def _pow2_at_least(n: int, lo: int = 8, hi: int = 1024) -> int:
 
 class Executor:
     def __init__(self, index: UnifiedIndex, m_cap_max: int = 1024,
-                 row_cap: int = 8):
+                 row_cap: int = 8, backend: str = "sorted",
+                 interpret: bool = False, bucket_width: int | None = None):
         self.index = index
-        self.dev = index.device_arrays()
+        self.engine = MatchEngine.from_index(index, backend=backend,
+                                             interpret=interpret,
+                                             bucket_width=bucket_width)
+        self.dev = self.engine.dev          # back-compat alias
         self.n_tables = index.n_tables
         self.max_cols = index.max_cols
         self.m_cap_max = m_cap_max
         self.row_cap = row_cap
+        rungs = {min(c, m_cap_max) for c in CAP_LADDER}
+        if m_cap_max > max(CAP_LADDER):
+            rungs.add(m_cap_max)        # honor caps above the default ladder
+        self.cap_ladder = tuple(sorted(rungs))
+        self._hash_cache: dict = {}
+        self._hash_cache_max = 1 << 20
 
     # ------------------------------------------------------------------ util
+    def _hash_many(self, values) -> np.ndarray:
+        """Memoized value hashing (shared across queries / plans).  The memo
+        is bounded: a long-lived serving executor seeing an unbounded stream
+        of distinct values resets it instead of growing forever."""
+        vals = list(values)
+        out = np.empty(len(vals), np.uint32)
+        cache = self._hash_cache
+        if len(cache) > self._hash_cache_max:
+            cache.clear()
+        for i, v in enumerate(vals):
+            h = cache.get(v)
+            if h is None:
+                h = hash_value(v)
+                cache[v] = h
+            out[i] = h
+        return out
+
     def _hashed(self, values) -> np.ndarray:
         """Hash + dedupe (SQL IN (...) set semantics)."""
-        h = hash_array(list(values))
-        return np.unique(h)
+        return np.unique(self._hash_many(values))
+
+    @staticmethod
+    def _pad_queries(h: np.ndarray, lo: int = 16):
+        """Pad a hashed query array to the power-of-two shape ladder so any
+        query set of the same capacity bucket reuses the compiled seeker."""
+        n = len(h)
+        width = _pow2_at_least(max(n, 1), lo=lo, hi=1 << 30)
+        hp = np.full(width, PAD_SENTINEL, np.uint32)
+        hp[:n] = h
+        mask = np.zeros(width, bool)
+        mask[:n] = True
+        return jnp.asarray(hp), jnp.asarray(mask)
 
     def seeker_stats(self, spec: SeekerSpec):
         """(cardinality, n_cols, avg value frequency) — the cost features."""
@@ -72,27 +131,33 @@ class Executor:
         avg = float(self.index.host_counts(h).mean()) if len(h) else 0.0
         return (float(len(spec.values)), float(spec.n_cols), avg)
 
+    def _quantize_cap(self, need: int) -> int:
+        for c in self.cap_ladder:
+            if need <= c:
+                return c
+        return self.cap_ladder[-1]
+
     def _mcap_for(self, hashes: np.ndarray) -> int:
         counts = self.index.host_counts(hashes)
-        return _pow2_at_least(int(counts.max(initial=1)), hi=self.m_cap_max)
+        return self._quantize_cap(int(counts.max(initial=1)))
 
     # --------------------------------------------------------------- seekers
-    def run_seeker(self, spec: SeekerSpec, allowed=None) -> comb.ResultSet:
+    def run_seeker(self, spec: SeekerSpec, allowed=None,
+                   sync: bool = True) -> comb.ResultSet:
         if spec.kind in ("SC", "KW"):
             h = self._hashed(spec.values)
             m_cap = self._mcap_for(h)
-            qh = jnp.asarray(h)
-            qm = jnp.ones(len(h), bool)
+            qh, qm = self._pad_queries(h)
             fn = seek.sc_seeker if spec.kind == "SC" else seek.kw_seeker
             kw = dict(m_cap=m_cap, n_tables=self.n_tables)
             if spec.kind == "SC":
                 kw["max_cols"] = self.max_cols
-            scores, ovf = fn(self.dev, qh, qm, allowed=allowed, **kw)
+            scores, ovf = fn(self.engine, qh, qm, allowed=allowed, **kw)
         elif spec.kind == "MC":
             values = list(dict.fromkeys(spec.values))   # dedupe tuples
             nt = len(values)
             n_cols = spec.n_cols
-            th = np.stack([hash_array([t[c] for t in values])
+            th = np.stack([self._hash_many([t[c] for t in values])
                            for c in range(n_cols)], axis=1)       # [nt, n_cols]
             counts = np.stack([self.index.host_counts(th[:, c])
                                for c in range(n_cols)], axis=1)
@@ -100,50 +165,73 @@ class Executor:
             qks = np.array([row_superkey(th[i], np.zeros(n_cols, np.int64))
                             for i in range(nt)], np.uint64)
             qk_lo, qk_hi = split_u64(qks)
-            m_cap = _pow2_at_least(int(counts.max(initial=1)), hi=self.m_cap_max)
-            args = (self.dev, jnp.asarray(th), jnp.asarray(init_col),
+            m_cap = self._quantize_cap(int(counts.max(initial=1)))
+            # pad the tuple batch onto the shape ladder
+            ntp = _pow2_at_least(max(nt, 1), lo=8, hi=1 << 30)
+            pad = ntp - nt
+            th = np.pad(th, ((0, pad), (0, 0)))
+            init_col = np.pad(init_col, (0, pad))
+            qk_lo, qk_hi = np.pad(qk_lo, (0, pad)), np.pad(qk_hi, (0, pad))
+            tmask = np.zeros(ntp, bool)
+            tmask[:nt] = True
+            args = (self.engine, jnp.asarray(th), jnp.asarray(init_col),
                     jnp.asarray(qk_lo), jnp.asarray(qk_hi))
-            # stage 1: survivor counts after predicate + bloom -> the stage-2
-            # validation runs with compacted candidate buffers (this is where
-            # the threaded 'WHERE TableId IN (IR)' actually shrinks work)
-            surv = seek.mc_survivor_counts(*args, m_cap=m_cap, allowed=allowed)
-            m_cap2 = _pow2_at_least(int(jnp.max(surv)), hi=m_cap)
-            scores, _rows, ovf = seek.mc_seeker_compact(
-                *args, m_cap=m_cap, m_cap2=min(m_cap2, m_cap),
-                n_tables=self.n_tables, n_cols=n_cols,
-                row_stride=self.index.row_stride, allowed=allowed)
+            if sync:
+                # stage 1: survivor counts after predicate + bloom -> the
+                # stage-2 validation runs with compacted candidate buffers
+                # (this is where the threaded 'WHERE TableId IN (IR)'
+                # actually shrinks work)
+                surv = seek.mc_survivor_counts(*args, m_cap=m_cap,
+                                               allowed=allowed,
+                                               tuple_mask=jnp.asarray(tmask))
+                m_cap2 = self._quantize_cap(int(jnp.max(surv)))
+                scores, _rows, ovf = seek.mc_seeker_compact(
+                    *args, m_cap=m_cap, m_cap2=min(m_cap2, m_cap),
+                    n_tables=self.n_tables, n_cols=n_cols,
+                    row_stride=self.index.row_stride, allowed=allowed,
+                    tuple_mask=jnp.asarray(tmask))
+            else:
+                # async dispatch: skip the data-dependent compaction stage
+                # (its capacity pick is a host sync); validate at full m_cap
+                scores, _rows, ovf = seek.mc_seeker(
+                    *args, m_cap=m_cap, n_tables=self.n_tables,
+                    n_cols=n_cols, row_stride=self.index.row_stride,
+                    allowed=allowed, tuple_mask=jnp.asarray(tmask))
         elif spec.kind == "C":
             pairs = list(dict.fromkeys(zip(spec.values, spec.target)))
-            h = hash_array([p[0] for p in pairs])
+            h = self._hash_many([p[0] for p in pairs])
             tgt = np.array([float(p[1]) for p in pairs])
             qbit = (tgt >= tgt.mean()).astype(np.int8)            # k0/k1 split
             m_cap = self._mcap_for(h)
-            qh, qm = jnp.asarray(h), jnp.ones(len(h), bool)
+            qh, qm = self._pad_queries(h)
+            qbit = np.pad(qbit, (0, qh.shape[0] - len(qbit)))
             kw = dict(m_cap=m_cap, row_cap=self.row_cap,
                       n_tables=self.n_tables, max_cols=self.max_cols,
                       h_sample=spec.h, sampling=spec.sampling,
                       row_stride=self.index.row_stride, allowed=allowed)
-            if allowed is not None:
+            if allowed is not None and sync:
                 # two-stage: compact the join side to the surviving postings
-                surv = int(seek.c_survivor_counts(self.dev, qh, qm,
+                surv = int(seek.c_survivor_counts(self.engine, qh, qm,
                                                   m_cap=m_cap,
                                                   allowed=allowed))
-                cap2 = _pow2_at_least(max(surv, 1), hi=len(h) * m_cap)
-                scores, ovf = seek.c_seeker_compact(self.dev, qh, qm,
+                cap2 = _pow2_at_least(max(surv, 1),
+                                      hi=int(qh.shape[0]) * m_cap)
+                scores, ovf = seek.c_seeker_compact(self.engine, qh, qm,
                                                     jnp.asarray(qbit),
                                                     cap2=cap2, **kw)
             else:
-                scores, ovf = seek.c_seeker(self.dev, qh, qm,
+                scores, ovf = seek.c_seeker(self.engine, qh, qm,
                                             jnp.asarray(qbit), **kw)
         else:
             raise ValueError(spec.kind)
-        scores.block_until_ready()
-        self._last_overflow = int(ovf)
+        if sync:
+            scores.block_until_ready()
+        self._last_overflow = ovf
         return comb.topk_result(scores, spec.k)
 
     # ------------------------------------------------------------------ plan
     def run(self, plan: Plan, optimize: bool = True,
-            cost_model: CostModel | None = None):
+            cost_model: CostModel | None = None, sync: bool = True):
         info = ExecInfo(optimized=optimize)
         ep = optimize_plan(plan, self.seeker_stats, cost_model) if optimize \
             else None
@@ -151,10 +239,10 @@ class Executor:
 
         def timed_seeker(name, spec, allowed=None):
             t0 = time.perf_counter()
-            rs = self.run_seeker(spec, allowed=allowed)
+            rs = self.run_seeker(spec, allowed=allowed, sync=sync)
             info.node_seconds[name] = time.perf_counter() - t0
             info.order.append(name)
-            info.overflow += self._last_overflow
+            info.overflow_parts.append(self._last_overflow)
             return rs
 
         def eval_node(name: str) -> comb.ResultSet:

@@ -64,7 +64,7 @@ class UnifiedIndex:
     rank_rand: np.ndarray        # i32 [N]
     # numeric-by-row view (indices into the arrays above)
     num_perm: np.ndarray         # i32 [M] numeric postings by (table,row)
-    num_rowkey: np.ndarray       # i64 [M] sorted rowkeys of num_perm
+    num_rowkey: np.ndarray       # i32 [M] sorted rowkeys of num_perm
     # metadata
     n_tables: int
     max_cols: int
@@ -116,21 +116,26 @@ class UnifiedIndex:
     def padded_buckets(self, width: int):
         """Padded radix-bucket layout for the Pallas probe kernel: returns
         (bucket_hashes u32 [2^bits, width], bucket_payload i32 [...],
-        overflow_count)."""
+        overflow_count).  Fully vectorized: one scatter over the postings
+        instead of a Python loop over 2^bits buckets."""
         nb = 1 << self.bucket_bits
         bh = np.full((nb, width), hashing.MISSING, np.uint32)
         bp = np.full((nb, width), -1, np.int32)
         shift = 32 - self.bucket_bits
         buckets = (self.cell_hash >> shift).astype(np.int64)
-        overflow = 0
-        starts = self.bucket_offsets
-        for b in range(nb):
-            s, e = int(starts[b]), int(starts[b + 1])
-            n = min(e - s, width)
-            overflow += max(e - s - width, 0)
-            bh[b, :n] = self.cell_hash[s:s + n]
-            bp[b, :n] = np.arange(s, s + n)
+        # position of each posting within its bucket
+        starts = self.bucket_offsets[:-1]
+        pos = np.arange(self.n_postings, dtype=np.int64) - starts[buckets]
+        keep = pos < width
+        counts = np.diff(self.bucket_offsets)
+        overflow = int(np.maximum(counts - width, 0).sum())
+        bh[buckets[keep], pos[keep]] = self.cell_hash[keep]
+        bp[buckets[keep], pos[keep]] = np.nonzero(keep)[0].astype(np.int32)
         return bh, bp, overflow
+
+    def max_bucket_count(self) -> int:
+        """Largest bucket population (the lossless probe-kernel width)."""
+        return int(np.diff(self.bucket_offsets).max(initial=0))
 
     def aos_view(self) -> np.ndarray:
         """Row-store interleave (hash,t,c,r,sk_lo,sk_hi,quadrant) i64-packed
@@ -217,7 +222,7 @@ def build_index(lake: DataLake, bucket_bits: int = 12, seed: int = 0,
     assert lake.n_tables * row_stride < 2 ** 31, \
         "int32 rowkey overflow: shard the lake (see core/distributed.py)"
     np_order = np.argsort(rowkey, kind="stable")
-    num_perm = numeric[np_order].astype(np.int64)
+    num_perm = numeric[np_order].astype(np.int32)
     num_rowkey = rowkey[np_order].astype(np.int32)
 
     return UnifiedIndex(

@@ -1,0 +1,189 @@
+"""MatchEngine: the unified probe layer every seeker routes through.
+
+One object owns the device-resident index arrays, the padded radix-bucket
+layout, and the low-level match primitives:
+
+* ``probe(q_hash, q_mask, m_cap)`` -> (pidx, valid, overflow) — postings per
+  query value, expanded to a static [nq, m_cap] window.  Two interchangeable
+  backends: ``"sorted"`` (binary search over the globally hash-sorted
+  postings) and ``"bucket"`` (the Pallas ``bucket_probe`` kernel over the
+  padded radix-bucket table).  Seeker outputs are bit-identical across
+  backends (parity-tested in tests/test_match_engine.py).
+* ``rowjoin(rowkeys, mask, row_cap)`` — the numeric-postings-by-row probe of
+  the correlation seeker (same expansion over ``num_rowkey``).
+* ``bloom(...)`` — the MC seeker's XASH superkey containment stage, routed
+  through the ``superkey_filter`` kernel package.
+* ``qcr(n_agree, n_all)`` — the correlation seeker's scoring epilogue,
+  routed through the ``qcr_score`` kernel package.
+* ``member(sorted_keys, queries)`` — batched sorted-membership (the MC
+  validation join).
+
+The engine is a registered pytree: its arrays are leaves (so jitted seekers
+close over nothing) and its configuration is static aux data (so switching
+backend retraces, while re-querying with new values of the same padded shape
+hits the jit cache — the retrace-free serving contract).
+
+``probe_sorted`` is also exposed as a free function: the distributed
+shard_map seekers (core/distributed.py) reuse the same primitive on their
+shard-local array slices, where no engine object exists.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.bucket_probe import ops as bucket_ops
+from repro.kernels.qcr_score import ops as qcr_ops
+from repro.kernels.superkey_filter import ops as sk_ops
+
+BACKENDS = ("sorted", "bucket")
+
+
+def probe_sorted(sorted_keys, queries, q_mask, cap):
+    """Match range per query in a sorted key array, expanded to [nq, cap].
+
+    Returns (pidx i32 [nq, cap] clipped gather indices, valid bool [nq, cap],
+    overflow = matches beyond cap, summed)."""
+    lo = jnp.searchsorted(sorted_keys, queries, side="left")
+    hi = jnp.searchsorted(sorted_keys, queries, side="right")
+    pidx = lo[:, None] + jnp.arange(cap)[None, :]
+    valid = (pidx < hi[:, None]) & q_mask[:, None]
+    pidx = jnp.clip(pidx, 0, sorted_keys.shape[0] - 1)
+    overflow = jnp.sum(jnp.where(q_mask, jnp.maximum(hi - lo - cap, 0), 0))
+    return pidx, valid, overflow
+
+
+def sorted_member(sorted_keys, queries):
+    """Batched membership: sorted_keys [B, M] row-sorted, queries [B, C] ->
+    bool [B, C] (the MC validation join primitive)."""
+    loc = jnp.clip(jax.vmap(jnp.searchsorted)(sorted_keys, queries),
+                   0, sorted_keys.shape[1] - 1)
+    return jnp.take_along_axis(sorted_keys, loc, axis=1) == queries
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Static (hashable) part of a MatchEngine — the jit cache key."""
+    backend: str
+    interpret: bool
+    bucket_bits: int
+    bucket_width: int
+    n_tables: int
+    max_cols: int
+    row_stride: int
+
+
+class MatchEngine:
+    """See module docstring.  Build with ``MatchEngine.from_index``."""
+
+    def __init__(self, dev: dict, bucket_hashes, bucket_payload,
+                 config: EngineConfig):
+        self.dev = dev
+        self.bucket_hashes = bucket_hashes
+        self.bucket_payload = bucket_payload
+        self.config = config
+
+    # ------------------------------------------------------------- building
+    @classmethod
+    def from_index(cls, index, *, backend: str = "sorted",
+                   interpret: bool = False, bucket_width: int | None = None):
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, "
+                             f"got {backend!r}")
+        dev = index.device_arrays()
+        bh = bp = None
+        width = 0
+        if backend == "bucket":
+            # the layout must be lossless: a truncated bucket would drop
+            # matches without any overflow accounting (the probe can only
+            # count what the layout kept)
+            need = max(index.max_bucket_count(), 1)
+            if bucket_width is None:
+                bucket_width = need
+            elif bucket_width < need:
+                raise ValueError(
+                    f"bucket_width={bucket_width} is smaller than the "
+                    f"fullest bucket ({need}): probing would silently drop "
+                    f"matches; raise bucket_width or bucket_bits")
+            width = ((bucket_width + 127) // 128) * 128   # TPU lane padding
+            bh_np, bp_np, layout_overflow = index.padded_buckets(width)
+            assert layout_overflow == 0
+            bh, bp = jnp.asarray(bh_np), jnp.asarray(bp_np)
+        cfg = EngineConfig(backend=backend, interpret=interpret,
+                           bucket_bits=index.bucket_bits, bucket_width=width,
+                           n_tables=index.n_tables, max_cols=index.max_cols,
+                           row_stride=index.row_stride)
+        return cls(dev, bh, bp, cfg)
+
+    @property
+    def backend(self) -> str:
+        return self.config.backend
+
+    # ------------------------------------------------------------ primitives
+    def probe(self, q_hash, q_mask, m_cap: int):
+        """Postings window per query hash: (pidx, valid, overflow)."""
+        if self.config.backend == "sorted":
+            return probe_sorted(self.dev["hash"], q_hash, q_mask, m_cap)
+        nq = q_hash.shape[0]
+        q_block = min(256, nq)
+        hits = bucket_ops.probe(self.bucket_hashes, self.bucket_payload,
+                                q_hash, self.config.bucket_bits,
+                                use_kernel=True,
+                                interpret=self.config.interpret,
+                                q_block=q_block)          # [nq, W] payload|-1
+        hit = hits >= 0
+        count = jnp.sum(hit, axis=1)
+        n = self.dev["hash"].shape[0]
+        # postings are bucket-contiguous and hash-sorted, so the matched
+        # payloads form the run [base, base + count): recover the window from
+        # the min payload instead of compacting the hit matrix
+        base = jnp.min(jnp.where(hit, hits, n), axis=1)
+        pidx = base[:, None] + jnp.arange(m_cap)[None, :]
+        valid = (jnp.arange(m_cap)[None, :] < count[:, None]) & q_mask[:, None]
+        pidx = jnp.clip(pidx, 0, n - 1)
+        overflow = jnp.sum(jnp.where(q_mask, jnp.maximum(count - m_cap, 0), 0))
+        return pidx, valid, overflow
+
+    def rowjoin(self, rowkeys, mask, row_cap: int):
+        """Numeric-postings window per candidate rowkey: (nidx, nvalid)."""
+        nidx, nvalid, _ = probe_sorted(self.dev["num_rowkey"], rowkeys, mask,
+                                       row_cap)
+        return nidx, nvalid
+
+    def bloom(self, pidx, qk_lo, qk_hi):
+        """XASH superkey containment of query digests in the candidate rows
+        at ``pidx`` [nt, cap]: (row_sk & q_sk) == q_sk, via the
+        superkey_filter kernel package."""
+        cand_lo = self.dev["sk_lo"][pidx]
+        cand_hi = self.dev["sk_hi"][pidx]
+        return sk_ops.filter_candidates(
+            cand_lo, cand_hi, qk_lo, qk_hi,
+            use_kernel=self.config.backend == "bucket",
+            interpret=self.config.interpret)
+
+    def qcr(self, n_agree, n_all, min_support: int = 3):
+        """QCR epilogue |2a - n| / n with the support floor, via the
+        qcr_score kernel package."""
+        return qcr_ops.score_segments(
+            n_agree, n_all, min_support=min_support,
+            use_kernel=self.config.backend == "bucket",
+            interpret=self.config.interpret)
+
+    def member(self, sorted_keys, queries):
+        return sorted_member(sorted_keys, queries)
+
+
+def _engine_flatten(e: MatchEngine):
+    return ((e.dev, e.bucket_hashes, e.bucket_payload), e.config)
+
+
+def _engine_unflatten(aux, children):
+    dev, bh, bp = children
+    return MatchEngine(dev, bh, bp, aux)
+
+
+jax.tree_util.register_pytree_node(MatchEngine, _engine_flatten,
+                                   _engine_unflatten)

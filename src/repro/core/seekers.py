@@ -1,33 +1,37 @@
 """The four BLEND seekers as static-shaped, jittable scan programs.
 
-Every seeker maps (index arrays, hashed query) -> dense per-table scores
+Every seeker maps (MatchEngine, hashed query) -> dense per-table scores
 [n_tables] (the TPU-native result-set representation; combiners are
 elementwise set algebra over these vectors).  ``allowed`` is the optimizer's
 threaded intermediate-result mask — the TPU analogue of the paper's
 ``WHERE TableId IN (...)`` query rewriting: postings from dead tables are
 zeroed *before* the expensive group-by / validation stages.
 
+All probing goes through ``MatchEngine.probe`` (core/match.py): the engine
+owns the device index and selects the searchsorted or Pallas bucket-probe
+backend; seekers never touch the raw hash array.  The MC bloom stage and the
+correlation scoring epilogue likewise route through the superkey_filter and
+qcr_score kernel packages via the engine.
+
 Static capacities (``m_cap`` matches per value, ``row_cap`` numeric cells per
 row) keep shapes jit-stable; overflows are counted and surfaced, never
-silently dropped.
+silently dropped.  ``TRACE_COUNTS`` increments once per jit trace of each
+seeker — the executor's retrace-free contract is asserted against it.
 """
 from __future__ import annotations
 
+import collections
 import functools
 
 import jax
 import jax.numpy as jnp
 
+TRACE_COUNTS = collections.Counter()
 
-def _expand_matches(idx_hash, q_hash, q_mask, m_cap):
-    """Postings range per query value, expanded to a static [nq, m_cap]."""
-    lo = jnp.searchsorted(idx_hash, q_hash, side="left")
-    hi = jnp.searchsorted(idx_hash, q_hash, side="right")
-    pidx = lo[:, None] + jnp.arange(m_cap)[None, :]
-    valid = (pidx < hi[:, None]) & q_mask[:, None]
-    pidx = jnp.clip(pidx, 0, idx_hash.shape[0] - 1)
-    overflow = jnp.sum(jnp.maximum(hi - lo - m_cap, 0))
-    return pidx, valid, overflow
+
+def _mark_trace(kind: str):
+    """Python-side effect: runs once per jit trace, never per call."""
+    TRACE_COUNTS[kind] += 1
 
 
 def _first_occurrence(*keys):
@@ -45,10 +49,13 @@ def _first_occurrence(*keys):
 # --------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("m_cap", "n_tables", "max_cols"))
-def sc_seeker(idx, q_hash, q_mask, *, m_cap, n_tables, max_cols, allowed=None):
+def sc_seeker(engine, q_hash, q_mask, *, m_cap, n_tables, max_cols,
+              allowed=None):
     """COUNT(DISTINCT CellValue) GROUP BY (TableId, ColumnId); table score =
     best column.  Returns (scores f32 [n_tables], overflow)."""
-    pidx, valid, ovf = _expand_matches(idx["hash"], q_hash, q_mask, m_cap)
+    _mark_trace("SC")
+    idx = engine.dev
+    pidx, valid, ovf = engine.probe(q_hash, q_mask, m_cap)
     t = idx["table"][pidx]
     c = idx["col"][pidx]
     contrib = valid & _first_occurrence(t, c)
@@ -65,8 +72,10 @@ def sc_seeker(idx, q_hash, q_mask, *, m_cap, n_tables, max_cols, allowed=None):
 # --------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("m_cap", "n_tables"))
-def kw_seeker(idx, q_hash, q_mask, *, m_cap, n_tables, allowed=None):
-    pidx, valid, ovf = _expand_matches(idx["hash"], q_hash, q_mask, m_cap)
+def kw_seeker(engine, q_hash, q_mask, *, m_cap, n_tables, allowed=None):
+    _mark_trace("KW")
+    idx = engine.dev
+    pidx, valid, ovf = engine.probe(q_hash, q_mask, m_cap)
     t = idx["table"][pidx]
     contrib = valid & _first_occurrence(t)
     if allowed is not None:
@@ -80,12 +89,18 @@ def kw_seeker(idx, q_hash, q_mask, *, m_cap, n_tables, allowed=None):
 # MC seeker — multi-column join discovery (MATE-style, Listing 2)
 # --------------------------------------------------------------------------
 
+def _tuple_mask_or_ones(tuple_mask, nt):
+    return jnp.ones((nt,), bool) if tuple_mask is None else tuple_mask
+
+
 @functools.partial(jax.jit, static_argnames=("m_cap", "n_tables", "n_cols",
                                              "use_superkey", "row_stride"))
-def mc_seeker(idx, tuple_hashes, init_col, qk_lo, qk_hi, *, m_cap, n_tables,
-              n_cols, row_stride=1 << 22, use_superkey=True, allowed=None):
+def mc_seeker(engine, tuple_hashes, init_col, qk_lo, qk_hi, *, m_cap,
+              n_tables, n_cols, row_stride=1 << 22, use_superkey=True,
+              allowed=None, tuple_mask=None):
     """tuple_hashes: [nt, n_cols] hashed query tuples; init_col: [nt] index of
-    the least-frequent (initiator) value; qk_lo/hi: [nt] query superkeys.
+    the least-frequent (initiator) value; qk_lo/hi: [nt] query superkeys;
+    tuple_mask: [nt] optional validity of (padded) tuples.
 
     Phase 1: probe the initiator value -> candidate rows.
     Phase 2: XASH superkey bloom filter  ((row_sk & q_sk) == q_sk).
@@ -93,24 +108,24 @@ def mc_seeker(idx, tuple_hashes, init_col, qk_lo, qk_hi, *, m_cap, n_tables,
              same (table, row).
     Returns (scores = matched-tuple count per table, row_counts = candidate
     rows that survive per table (Table V TP metric), overflow)."""
+    _mark_trace("MC")
+    idx = engine.dev
     nt = tuple_hashes.shape[0]
     h0 = jnp.take_along_axis(tuple_hashes, init_col[:, None], 1)[:, 0]
-    q_mask = jnp.ones((nt,), bool)
-    pidx, valid, ovf = _expand_matches(idx["hash"], h0, q_mask, m_cap)
+    q_mask = _tuple_mask_or_ones(tuple_mask, nt)
+    pidx, valid, ovf = engine.probe(h0, q_mask, m_cap)
     t = idx["table"][pidx]
     r = idx["row"][pidx]
     if allowed is not None:
         valid &= allowed[t]
     if use_superkey:
-        bloom = ((idx["sk_lo"][pidx] & qk_lo[:, None]) == qk_lo[:, None]) & \
-                ((idx["sk_hi"][pidx] & qk_hi[:, None]) == qk_hi[:, None])
-        valid &= bloom
+        valid &= engine.bloom(pidx, qk_lo, qk_hi)
     rowkey = t.astype(jnp.int32) * row_stride + r.astype(jnp.int32)
 
     ok = valid
     for j in range(n_cols):                       # static, small
         hj = tuple_hashes[:, j]
-        pj, vj, _ = _expand_matches(idx["hash"], hj, q_mask, m_cap)
+        pj, vj, _ = engine.probe(hj, q_mask, m_cap)
         tj = idx["table"][pj]
         rj = idx["row"][pj]
         rkj = tj.astype(jnp.int32) * row_stride + rj.astype(jnp.int32)
@@ -135,44 +150,49 @@ def mc_seeker(idx, tuple_hashes, init_col, qk_lo, qk_hi, *, m_cap, n_tables,
 # where "WHERE TableId IN (IR)" actually reduces work on a vector machine.
 # --------------------------------------------------------------------------
 
-def _mc_candidates(idx, tuple_hashes, init_col, qk_lo, qk_hi, m_cap,
-                   use_superkey, allowed):
+def _mc_candidates(engine, tuple_hashes, init_col, qk_lo, qk_hi, m_cap,
+                   use_superkey, allowed, tuple_mask):
+    idx = engine.dev
     nt = tuple_hashes.shape[0]
     h0 = jnp.take_along_axis(tuple_hashes, init_col[:, None], 1)[:, 0]
-    q_mask = jnp.ones((nt,), bool)
-    pidx, valid, ovf = _expand_matches(idx["hash"], h0, q_mask, m_cap)
+    q_mask = _tuple_mask_or_ones(tuple_mask, nt)
+    pidx, valid, ovf = engine.probe(h0, q_mask, m_cap)
     t = idx["table"][pidx]
     r = idx["row"][pidx]
     if allowed is not None:
         valid &= allowed[t]
     if use_superkey:
-        bloom = ((idx["sk_lo"][pidx] & qk_lo[:, None]) == qk_lo[:, None]) & \
-                ((idx["sk_hi"][pidx] & qk_hi[:, None]) == qk_hi[:, None])
-        valid &= bloom
-    return t, r, valid, ovf
+        valid &= engine.bloom(pidx, qk_lo, qk_hi)
+    return t, r, valid, ovf, q_mask
 
 
 @functools.partial(jax.jit, static_argnames=("m_cap", "use_superkey"))
-def mc_survivor_counts(idx, tuple_hashes, init_col, qk_lo, qk_hi, *, m_cap,
-                       use_superkey=True, allowed=None):
+def mc_survivor_counts(engine, tuple_hashes, init_col, qk_lo, qk_hi, *, m_cap,
+                       use_superkey=True, allowed=None, tuple_mask=None):
     """Stage 1: candidates per tuple surviving the threaded predicate +
     bloom prune (the planner picks the stage-2 capacity from the max)."""
-    _, _, valid, _ = _mc_candidates(idx, tuple_hashes, init_col, qk_lo,
-                                    qk_hi, m_cap, use_superkey, allowed)
+    _mark_trace("MC_stage1")
+    _, _, valid, _, _ = _mc_candidates(engine, tuple_hashes, init_col, qk_lo,
+                                       qk_hi, m_cap, use_superkey, allowed,
+                                       tuple_mask)
     return jnp.sum(valid, axis=1)
 
 
 @functools.partial(jax.jit, static_argnames=("m_cap", "m_cap2", "n_tables",
                                              "n_cols", "use_superkey",
                                              "row_stride"))
-def mc_seeker_compact(idx, tuple_hashes, init_col, qk_lo, qk_hi, *, m_cap,
+def mc_seeker_compact(engine, tuple_hashes, init_col, qk_lo, qk_hi, *, m_cap,
                       m_cap2, n_tables, n_cols, row_stride=1 << 22,
-                      use_superkey=True, allowed=None):
+                      use_superkey=True, allowed=None, tuple_mask=None):
     """Stage 2: exact validation over compacted [nt, m_cap2] candidates
     (m_cap2 << m_cap when the predicate filters hard)."""
+    _mark_trace("MC_stage2")
+    idx = engine.dev
     nt = tuple_hashes.shape[0]
-    t, r, valid, ovf = _mc_candidates(idx, tuple_hashes, init_col, qk_lo,
-                                      qk_hi, m_cap, use_superkey, allowed)
+    t, r, valid, ovf, q_mask = _mc_candidates(engine, tuple_hashes, init_col,
+                                              qk_lo, qk_hi, m_cap,
+                                              use_superkey, allowed,
+                                              tuple_mask)
     # compact: move surviving candidates to the front, take m_cap2
     order = jnp.argsort(~valid, axis=1, stable=True)[:, :m_cap2]
     t = jnp.take_along_axis(t, order, axis=1)
@@ -180,17 +200,15 @@ def mc_seeker_compact(idx, tuple_hashes, init_col, qk_lo, qk_hi, *, m_cap,
     valid = jnp.take_along_axis(valid, order, axis=1)
     rowkey = t.astype(jnp.int32) * row_stride + r.astype(jnp.int32)
 
-    q_mask = jnp.ones((nt,), bool)
     ok = valid
     for j in range(n_cols):
         hj = tuple_hashes[:, j]
-        pj, vj, _ = _expand_matches(idx["hash"], hj, q_mask, m_cap)
+        pj, vj, _ = engine.probe(hj, q_mask, m_cap)
         tj = idx["table"][pj]
         rj = idx["row"][pj]
         rkj = tj.astype(jnp.int32) * row_stride + rj.astype(jnp.int32)
         rkj = jnp.sort(jnp.where(vj, rkj, jnp.iinfo(jnp.int32).max), axis=1)
-        loc = jnp.clip(jax.vmap(jnp.searchsorted)(rkj, rowkey), 0, m_cap - 1)
-        member = jnp.take_along_axis(rkj, loc, axis=1) == rowkey
+        member = engine.member(rkj, rowkey)
         ok &= member | (init_col == j)[:, None]
     per_tt = jnp.zeros((nt * n_tables,), jnp.float32).at[
         (jnp.arange(nt)[:, None] * n_tables + t).reshape(-1)].max(
@@ -208,7 +226,7 @@ def mc_seeker_compact(idx, tuple_hashes, init_col, qk_lo, qk_hi, *, m_cap,
 @functools.partial(jax.jit, static_argnames=("m_cap", "row_cap", "n_tables",
                                              "max_cols", "h_sample", "sampling",
                                              "min_support", "row_stride"))
-def c_seeker(idx, qj_hash, q_mask, q_bit, *, m_cap, row_cap, n_tables,
+def c_seeker(engine, qj_hash, q_mask, q_bit, *, m_cap, row_cap, n_tables,
              max_cols, h_sample, row_stride=1 << 22, sampling="conv",
              min_support=3, allowed=None):
     """qj_hash: hashed join-key values; q_bit[i] = 1 iff the query target for
@@ -218,18 +236,16 @@ def c_seeker(idx, qj_hash, q_mask, q_bit, *, m_cap, row_cap, n_tables,
     triple via two segment-sums; table score = max |QCR| over triples with
     N >= min_support.  h-sampling filters the numeric side by the indexed
     convenience/random rank (sketch size chosen at query time)."""
-    pidx, valid, ovf = _expand_matches(idx["hash"], qj_hash, q_mask, m_cap)
+    _mark_trace("C")
+    idx = engine.dev
+    pidx, valid, ovf = engine.probe(qj_hash, q_mask, m_cap)
     t = idx["table"][pidx]
     r = idx["row"][pidx]
     cj = idx["col"][pidx]
     rowkey = t.astype(jnp.int32) * row_stride + r.astype(jnp.int32)
     rk_flat = rowkey.reshape(-1)
 
-    nlo = jnp.searchsorted(idx["num_rowkey"], rk_flat, side="left")
-    nhi = jnp.searchsorted(idx["num_rowkey"], rk_flat, side="right")
-    nidx = nlo[:, None] + jnp.arange(row_cap)[None, :]
-    nvalid = (nidx < nhi[:, None]) & valid.reshape(-1)[:, None]
-    nidx = jnp.clip(nidx, 0, idx["num_rowkey"].shape[0] - 1)
+    nidx, nvalid = engine.rowjoin(rk_flat, valid.reshape(-1), row_cap)
 
     ntab = idx["num_table"][nidx]
     ncol = idx["num_col"][nidx]
@@ -249,18 +265,18 @@ def c_seeker(idx, qj_hash, q_mask, q_bit, *, m_cap, row_cap, n_tables,
         nvalid.reshape(-1).astype(jnp.float32), mode="drop")
     n_agree = jnp.zeros(dim, jnp.float32).at[key].add(
         agree.reshape(-1).astype(jnp.float32), mode="drop")
-    qcr = jnp.abs(2.0 * n_agree - n_all) / jnp.maximum(n_all, 1.0)
-    qcr = jnp.where(n_all >= min_support, qcr, 0.0)
+    qcr = engine.qcr(n_agree, n_all, min_support)
     return qcr.reshape(n_tables, -1).max(axis=1), ovf
 
 
 @functools.partial(jax.jit, static_argnames=("m_cap",))
-def c_survivor_counts(idx, qj_hash, q_mask, *, m_cap, allowed=None):
+def c_survivor_counts(engine, qj_hash, q_mask, *, m_cap, allowed=None):
     """Stage 1 for the compacted correlation seeker: join-side matches that
     survive the threaded predicate."""
-    pidx, valid, _ = _expand_matches(idx["hash"], qj_hash, q_mask, m_cap)
+    _mark_trace("C_stage1")
+    pidx, valid, _ = engine.probe(qj_hash, q_mask, m_cap)
     if allowed is not None:
-        valid &= allowed[idx["table"][pidx]]
+        valid &= allowed[engine.dev["table"][pidx]]
     return jnp.sum(valid)
 
 
@@ -268,12 +284,14 @@ def c_survivor_counts(idx, qj_hash, q_mask, *, m_cap, allowed=None):
                                              "n_tables", "max_cols",
                                              "h_sample", "sampling",
                                              "min_support", "row_stride"))
-def c_seeker_compact(idx, qj_hash, q_mask, q_bit, *, m_cap, cap2, row_cap,
+def c_seeker_compact(engine, qj_hash, q_mask, q_bit, *, m_cap, cap2, row_cap,
                      n_tables, max_cols, h_sample, row_stride=1 << 22,
                      sampling="conv", min_support=3, allowed=None):
     """Stage 2: the numeric row-join + QCR scoring runs over the compacted
     [cap2] surviving join-side postings instead of [nq*m_cap]."""
-    pidx, valid, ovf = _expand_matches(idx["hash"], qj_hash, q_mask, m_cap)
+    _mark_trace("C_stage2")
+    idx = engine.dev
+    pidx, valid, ovf = engine.probe(qj_hash, q_mask, m_cap)
     t = idx["table"][pidx]
     if allowed is not None:
         valid &= allowed[t]
@@ -288,11 +306,7 @@ def c_seeker_compact(idx, qj_hash, q_mask, q_bit, *, m_cap, cap2, row_cap,
     cjf = cj.reshape(-1)[keep]
     qbf = qb.reshape(-1)[keep]
 
-    nlo = jnp.searchsorted(idx["num_rowkey"], rk, side="left")
-    nhi = jnp.searchsorted(idx["num_rowkey"], rk, side="right")
-    nidx = nlo[:, None] + jnp.arange(row_cap)[None, :]
-    nvalid = (nidx < nhi[:, None]) & kv[:, None] & (rk >= 0)[:, None]
-    nidx = jnp.clip(nidx, 0, idx["num_rowkey"].shape[0] - 1)
+    nidx, nvalid = engine.rowjoin(rk, kv & (rk >= 0), row_cap)
     ntab = idx["num_table"][nidx]
     ncol = idx["num_col"][nidx]
     nquad = idx["num_quadrant"][nidx]
@@ -305,6 +319,5 @@ def c_seeker_compact(idx, qj_hash, q_mask, q_bit, *, m_cap, cap2, row_cap,
         nvalid.reshape(-1).astype(jnp.float32), mode="drop")
     n_agree = jnp.zeros(dim, jnp.float32).at[key].add(
         agree.reshape(-1).astype(jnp.float32), mode="drop")
-    qcr = jnp.abs(2.0 * n_agree - n_all) / jnp.maximum(n_all, 1.0)
-    qcr = jnp.where(n_all >= min_support, qcr, 0.0)
+    qcr = engine.qcr(n_agree, n_all, min_support)
     return qcr.reshape(n_tables, -1).max(axis=1), ovf

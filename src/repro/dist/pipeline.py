@@ -1,0 +1,77 @@
+"""GPipe-style pipeline parallelism over a 'stage' mesh axis.
+
+Each device holds one stage's parameters; microbatches stream through the
+stages with ``ppermute`` shifts.  The schedule runs ``n_micro + n_stages - 1``
+ticks; device s computes real work on ticks [s, s + n_micro) and bubbles
+elsewhere (``bubble_fraction``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+def bubble_fraction(n_stages: int, n_micro: int) -> float:
+    """Idle fraction of the GPipe schedule: (S-1) / (M + S - 1)."""
+    return (n_stages - 1) / (n_micro + n_stages - 1)
+
+
+def pipeline_apply(stage_fn, stage_params, microbatches, *, mesh, axis="stage"):
+    """Run ``stage_fn`` over all stages in pipeline order.
+
+    stage_fn: (params_slice, x) -> y, same shape as x.
+    stage_params: pytree stacked on a leading [n_stages] axis.
+    microbatches: [n_micro, mb, ...] inputs.
+    Returns [n_micro, mb, ...] outputs after all stages.
+    """
+    n_stages = mesh.shape[axis]
+    n_micro = microbatches.shape[0]
+    ticks = n_micro + n_stages - 1
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(axis), P(axis)), out_specs=P(axis),
+        check_rep=False)
+    def run(params, xs):
+        # params: leading stage dim is 1 locally; xs: local slice of the
+        # microbatch stack [n_micro/S, mb, ...] — regather it so every stage
+        # sees the full queue and feeds from it on its own clock.
+        xs = jax.lax.all_gather(xs, axis, tiled=True)        # [n_micro, ...]
+        local = jax.tree.map(lambda p: p[0], params)
+        sidx = jax.lax.axis_index(axis)
+        fwd = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+        buf = jnp.zeros_like(xs[0])
+        outs = jnp.zeros_like(xs)
+
+        def tick(t, carry):
+            buf, outs = carry
+            # stage 0 injects microbatch t from the queue; others use the
+            # value shifted in from the previous stage at the end of t-1
+            inject = jnp.where(t < n_micro, xs[jnp.minimum(t, n_micro - 1)], 0)
+            x_in = jnp.where(sidx == 0, inject, buf)
+            y = stage_fn(local, x_in)
+            mb_idx = t - sidx                        # microbatch at this stage
+            active = (mb_idx >= 0) & (mb_idx < n_micro)
+            # last stage writes its finished microbatch to the output queue
+            write = active & (sidx == n_stages - 1)
+            outs = jnp.where(
+                write,
+                jax.lax.dynamic_update_index_in_dim(
+                    outs, y, jnp.clip(mb_idx, 0, n_micro - 1), 0),
+                outs)
+            y = jnp.where(active, y, 0)
+            buf = jax.lax.ppermute(y, axis, perm=fwd)
+            return buf, outs
+
+        _, outs = jax.lax.fori_loop(0, ticks, tick, (buf, outs))
+        # outs is populated only on the last stage; reduce to share it, then
+        # return this shard's slice of the microbatch stack
+        outs = jax.lax.psum(outs, axis)
+        shard = n_micro // n_stages
+        return jax.lax.dynamic_slice_in_dim(outs, sidx * shard, shard, 0)
+
+    return run(stage_params, microbatches)

@@ -1,0 +1,154 @@
+"""Sharding rules: logical-axis constraints + parameter partition specs.
+
+Models annotate activations with *logical* axes ("batch", "seq", "model");
+``maybe_constrain`` maps them onto whatever physical mesh is ambient (or is a
+no-op outside a mesh context, so every model runs unchanged on a single CPU
+device).  ``param_specs`` derives PartitionSpecs for an arbitrary parameter
+pytree from shapes alone: tensor-parallel on the model axis, optional ZeRO-3
+(fsdp) sharding over the data axes, and optional resident expert-parallelism
+over the data axis for MoE expert stacks.
+
+Mesh conventions (see launch/mesh.py): axis names are a subset of
+("pod", "data", "model"); "pod" and "data" together form the data-parallel
+group, "model" is the tensor-parallel group.
+"""
+from __future__ import annotations
+
+import jax
+from jax.interpreters import pxla
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def ambient_mesh():
+    """The mesh of the enclosing ``with mesh:`` context, or None."""
+    mesh = pxla.thread_resources.env.physical_mesh
+    return None if mesh.empty else mesh
+
+
+def dp_axes(mesh) -> tuple:
+    """The data-parallel mesh axes (every axis except 'model')."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _axes_size(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _dp_entry(mesh):
+    """Single axis name when the dp group is one axis, else the tuple."""
+    dp = dp_axes(mesh)
+    return dp[0] if len(dp) == 1 else dp
+
+
+# logical activation axis -> physical mesh axes.  "seq" rides the model axis:
+# sequence-parallel residual streams / context-parallel attention.
+def _physical(mesh, logical):
+    if logical in ("batch", "data"):
+        return dp_axes(mesh)
+    if logical in ("seq", "model"):
+        return ("model",) if "model" in mesh.axis_names else ()
+    raise ValueError(f"unknown logical axis {logical!r}")
+
+
+def maybe_constrain(x, *logical_axes):
+    """with_sharding_constraint(x, <mapped spec>) inside a mesh context;
+    identity outside.  Axes that do not divide their dim are dropped (the
+    constraint must stay legal for every reduced/smoke shape)."""
+    mesh = ambient_mesh()
+    if mesh is None:
+        return x
+    entries = []
+    for dim, logical in zip(x.shape, logical_axes):
+        if logical is None:
+            entries.append(None)
+            continue
+        phys = _physical(mesh, logical)
+        size = _axes_size(mesh, phys)
+        if size > 1 and dim % size == 0:
+            entries.append(phys[0] if len(phys) == 1 else phys)
+        else:
+            entries.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))
+
+
+def batch_spec(mesh, ndim: int) -> P:
+    """Batch-leading input spec: dim 0 over the data-parallel axes."""
+    return P(_dp_entry(mesh), *([None] * (ndim - 1)))
+
+
+# --------------------------------------------------------------------------
+# parameter partition specs
+# --------------------------------------------------------------------------
+
+_EXPERT_LEAVES = ("experts_gate", "experts_up", "experts_down")
+
+
+def _leaf_name(path) -> str:
+    if not path:
+        return ""
+    last = path[-1]
+    return last.key if hasattr(last, "key") else str(last)
+
+
+def _largest_divisible(shape, size, taken=()) -> int | None:
+    """Index of the largest dim divisible by ``size`` (ties -> later dim,
+    i.e. the output/ffn side of a matmul)."""
+    best = None
+    for i, d in enumerate(shape):
+        if i in taken or d < size or d % size:
+            continue
+        if best is None or d >= shape[best]:
+            best = i
+    return best
+
+
+def param_specs(tree, mesh, *, fsdp: bool = False,
+                expert_data_shard: bool = False):
+    """PartitionSpec pytree for a parameter pytree (arrays or SDS leaves).
+
+    * model axis: tensor parallelism on the largest divisible dim of every
+      >=2-D leaf (trailing dim preferred on ties -> column parallel).
+    * fsdp: additionally shard the largest remaining divisible dim over the
+      data axes (ZeRO-3; elastic restore re-gathers via device_put).
+    * expert_data_shard: MoE expert stacks [L, E, d, f] become resident on
+      the data axes (E -> data) with the ffn dim on model — tokens all-to-all
+      to the experts, weights never re-gathered.
+    Every assignment is divisibility-checked, so the specs are always legal
+    jit input shardings for any arch x mesh combination.
+    """
+    msize = mesh.shape.get("model", 1)
+    dsize = _axes_size(mesh, dp_axes(mesh))
+    dp = _dp_entry(mesh)
+
+    def rule(path, leaf):
+        shape = tuple(leaf.shape)
+        spec = [None] * len(shape)
+        if len(shape) < 2:
+            return P(*spec)
+        name = _leaf_name(path)
+        if expert_data_shard and name in _EXPERT_LEAVES and len(shape) >= 3:
+            e_dim = len(shape) - 3
+            f_dim = len(shape) - (2 if name == "experts_down" else 1)
+            if dsize > 1 and shape[e_dim] % dsize == 0:
+                spec[e_dim] = dp
+            if msize > 1 and shape[f_dim] % msize == 0:
+                spec[f_dim] = "model"
+            return P(*spec)
+        taken = []
+        if msize > 1:
+            i = _largest_divisible(shape, msize)
+            if i is not None:
+                spec[i] = "model"
+                taken.append(i)
+        if fsdp and dsize > 1:
+            j = _largest_divisible(shape, dsize, taken)
+            if j is not None:
+                spec[j] = dp
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(
+        rule, tree, is_leaf=lambda x: hasattr(x, "shape"))

@@ -24,6 +24,33 @@ def _qcr_kernel(quad_ref, qbit_ref, valid_ref, out_ref):
     out_ref[...] = jnp.where(n >= 3, qcr, 0.0)
 
 
+def _qcr_seg_kernel(agree_ref, all_ref, out_ref, *, min_support):
+    n = all_ref[...]
+    a = agree_ref[...]
+    qcr = jnp.abs(2.0 * a - n) / jnp.maximum(n, 1.0)
+    out_ref[...] = jnp.where(n >= min_support, qcr, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("min_support", "d_block",
+                                             "interpret"))
+def qcr_segments(n_agree, n_all, *, min_support=3, d_block=2048,
+                 interpret=False):
+    """Fused QCR epilogue over segment sums: n_agree/n_all f32 [D] (one entry
+    per (table, join_col, num_col) triple) -> |2a - n| / n with the support
+    floor.  The correlation seeker's scoring stage."""
+    d = n_agree.shape[0]
+    assert d % d_block == 0
+    grid = (d // d_block,)
+    return pl.pallas_call(
+        functools.partial(_qcr_seg_kernel, min_support=min_support),
+        grid=grid,
+        in_specs=[pl.BlockSpec((d_block,), lambda i: (i,))] * 2,
+        out_specs=pl.BlockSpec((d_block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=interpret,
+    )(n_agree, n_all)
+
+
 @functools.partial(jax.jit, static_argnames=("g_block", "interpret"))
 def qcr_score(quadrants, qbits, valid, *, g_block=128, interpret=False):
     g, h = quadrants.shape

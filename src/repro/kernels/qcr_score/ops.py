@@ -1,8 +1,8 @@
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.qcr_score.kernel import qcr_score
-from repro.kernels.qcr_score.ref import qcr_score_ref
+from repro.kernels.qcr_score.kernel import qcr_score, qcr_segments
+from repro.kernels.qcr_score.ref import qcr_score_ref, qcr_segments_ref
 
 
 def score(quadrants, qbits, valid, *, use_kernel=None, interpret=None,
@@ -16,3 +16,19 @@ def score(quadrants, qbits, valid, *, use_kernel=None, interpret=None,
     out = qcr_score(pd(quadrants), pd(qbits), pd(valid), g_block=g_block,
                     interpret=bool(interpret) and not on_tpu)
     return out[: quadrants.shape[0]]
+
+
+def score_segments(n_agree, n_all, *, min_support=3, use_kernel=None,
+                   interpret=None, d_block=2048):
+    """QCR epilogue over per-(table, join_col, num_col) segment sums."""
+    on_tpu = jax.default_backend() == "tpu"
+    use_kernel = on_tpu if use_kernel is None else use_kernel
+    if not use_kernel:
+        return qcr_segments_ref(n_agree, n_all, min_support)
+    d = n_agree.shape[0]
+    d_block = min(d_block, d)
+    pad = (-d) % d_block
+    out = qcr_segments(jnp.pad(n_agree, (0, pad)), jnp.pad(n_all, (0, pad)),
+                       min_support=min_support, d_block=d_block,
+                       interpret=bool(interpret) and not on_tpu)
+    return out[:d]

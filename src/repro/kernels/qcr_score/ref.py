@@ -11,3 +11,10 @@ def qcr_score_ref(quadrants, qbits, valid):
     a = jnp.sum(agree, axis=1)
     qcr = jnp.abs(2.0 * a - n) / jnp.maximum(n, 1.0)
     return jnp.where(n >= 3, qcr, 0.0)
+
+
+def qcr_segments_ref(n_agree, n_all, min_support=3):
+    """Epilogue over pre-reduced segment sums: |2a - n| / n, 0 under the
+    support floor."""
+    qcr = jnp.abs(2.0 * n_agree - n_all) / jnp.maximum(n_all, 1.0)
+    return jnp.where(n_all >= min_support, qcr, 0.0)

@@ -20,6 +20,40 @@ def _sk_kernel(sk_lo_ref, sk_hi_ref, q_lo_ref, q_hi_ref, out_ref):
     out_ref[...] = lo_ok & hi_ok
 
 
+def _sk_rows_kernel(sk_lo_ref, sk_hi_ref, q_lo_ref, q_hi_ref, out_ref):
+    sk_lo = sk_lo_ref[...]                    # [T_blk, M]
+    sk_hi = sk_hi_ref[...]
+    q_lo = q_lo_ref[...]                      # [T_blk]
+    q_hi = q_hi_ref[...]
+    lo_ok = (sk_lo & q_lo[:, None]) == q_lo[:, None]
+    hi_ok = (sk_hi & q_hi[:, None]) == q_hi[:, None]
+    out_ref[...] = lo_ok & hi_ok
+
+
+@functools.partial(jax.jit, static_argnames=("t_block", "interpret"))
+def superkey_filter_rows(sk_lo, sk_hi, q_lo, q_hi, *, t_block=8,
+                         interpret=False):
+    """Rowwise containment: candidate digests sk_lo/hi [T, M] (the gathered
+    probe window of tuple t) against that tuple's own query digest q_lo/hi
+    [T] — the MC seeker's bloom pruning stage."""
+    t, m = sk_lo.shape
+    assert t % t_block == 0
+    grid = (t // t_block,)
+    return pl.pallas_call(
+        _sk_rows_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t_block, m), lambda i: (i, 0)),
+            pl.BlockSpec((t_block, m), lambda i: (i, 0)),
+            pl.BlockSpec((t_block,), lambda i: (i,)),
+            pl.BlockSpec((t_block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((t_block, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, m), jnp.bool_),
+        interpret=interpret,
+    )(sk_lo, sk_hi, q_lo, q_hi)
+
+
 @functools.partial(jax.jit, static_argnames=("t_block", "n_block", "interpret"))
 def superkey_filter(sk_lo, sk_hi, q_lo, q_hi, *, t_block=8, n_block=1024,
                     interpret=False):

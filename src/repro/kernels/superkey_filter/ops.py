@@ -1,8 +1,10 @@
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.superkey_filter.kernel import superkey_filter
-from repro.kernels.superkey_filter.ref import superkey_filter_ref
+from repro.kernels.superkey_filter.kernel import (superkey_filter,
+                                                  superkey_filter_rows)
+from repro.kernels.superkey_filter.ref import (superkey_filter_ref,
+                                               superkey_filter_rows_ref)
 
 
 def filter_rows(sk_lo, sk_hi, q_lo, q_hi, *, use_kernel=None, interpret=None,
@@ -20,3 +22,24 @@ def filter_rows(sk_lo, sk_hi, q_lo, q_hi, *, use_kernel=None, interpret=None,
         t_block=t_block, n_block=n_block,
         interpret=bool(interpret) and not on_tpu)
     return out[: q_lo.shape[0], : sk_lo.shape[0]]
+
+
+def filter_candidates(sk_lo, sk_hi, q_lo, q_hi, *, use_kernel=None,
+                      interpret=None, t_block=8):
+    """Rowwise bloom prune: sk_lo/hi [T, M] gathered candidate digests,
+    q_lo/hi [T] per-row query digests -> [T, M] containment mask (the MC
+    seeker's superkey stage)."""
+    on_tpu = jax.default_backend() == "tpu"
+    use_kernel = on_tpu if use_kernel is None else use_kernel
+    if not use_kernel:
+        return superkey_filter_rows_ref(sk_lo, sk_hi, q_lo, q_hi)
+    t = q_lo.shape[0]
+    t_block = min(t_block, t)
+    pad = (-t) % t_block
+    pd2 = lambda x: jnp.pad(x, ((0, pad), (0, 0)))
+    out = superkey_filter_rows(
+        pd2(sk_lo), pd2(sk_hi),
+        jnp.pad(q_lo, (0, pad), constant_values=jnp.uint32(0xFFFFFFFF)),
+        jnp.pad(q_hi, (0, pad), constant_values=jnp.uint32(0xFFFFFFFF)),
+        t_block=t_block, interpret=bool(interpret) and not on_tpu)
+    return out[:t]

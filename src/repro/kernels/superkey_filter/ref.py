@@ -8,3 +8,11 @@ def superkey_filter_ref(sk_lo, sk_hi, q_lo, q_hi):
     lo_ok = (sk_lo[None, :] & q_lo[:, None]) == q_lo[:, None]
     hi_ok = (sk_hi[None, :] & q_hi[:, None]) == q_hi[:, None]
     return lo_ok & hi_ok
+
+
+def superkey_filter_rows_ref(sk_lo, sk_hi, q_lo, q_hi):
+    """Rowwise variant: sk_lo/hi [T, M] candidate digests vs q_lo/hi [T]
+    per-row query digests.  Returns [T, M] bool."""
+    lo_ok = (sk_lo & q_lo[:, None]) == q_lo[:, None]
+    hi_ok = (sk_hi & q_hi[:, None]) == q_hi[:, None]
+    return lo_ok & hi_ok

@@ -131,9 +131,11 @@ def parse_hlo(text: str) -> dict:
         operands = []
         if om:
             for tok in om.group(1).split(","):
-                tok = tok.strip()
-                if tok.startswith("%"):
-                    operands.append(tok[1:])
+                # newer XLA prints typed operands ("f32[2,2]{1,0} %x"); older
+                # prints bare "%x" — take the %name word either way
+                words = [w for w in tok.strip().split() if w.startswith("%")]
+                if words:
+                    operands.append(words[-1][1:])
         op = OpInfo(name, opcode, type_str, rest, operands)
         cur.ops[name] = op
         cur.order.append(name)

@@ -14,7 +14,7 @@ SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import numpy as np, jax, jax.numpy as jnp
-    from jax.sharding import AxisType
+    from repro.launch.mesh import compat_make_mesh
     from repro.core.lake import joinable_lake, correlation_lake, mc_joinable_lake
     from repro.core.index import build_index
     from repro.core.executor import Executor
@@ -22,13 +22,12 @@ SCRIPT = textwrap.dedent("""
     from repro.core.hashing import hash_array, row_superkey, split_u64
     from repro.core import seekers as seek
 
-    mesh = jax.make_mesh((2,2,2), ("pod","data","model"),
-                         axis_types=(AxisType.Auto,)*3)
+    mesh = compat_make_mesh((2,2,2), ("pod","data","model"))
 
     lake, query, _ = joinable_lake(n_tables=60, seed=1)
     idx = build_index(lake); ex = Executor(idx)
     h = hash_array(query); m_cap = ex._mcap_for(h)
-    ref, _ = seek.sc_seeker(ex.dev, jnp.asarray(h), jnp.ones(len(h), bool),
+    ref, _ = seek.sc_seeker(ex.engine, jnp.asarray(h), jnp.ones(len(h), bool),
                             m_cap=m_cap, n_tables=idx.n_tables,
                             max_cols=idx.max_cols)
     sharded = D.shard_device_index(idx, mesh)
@@ -39,7 +38,7 @@ SCRIPT = textwrap.dedent("""
 
     fnk = D.make_distributed_kw(mesh, m_cap=m_cap, n_tables=idx.n_tables)
     gotk, _ = fnk(sharded, jnp.asarray(h), jnp.ones(len(h), bool))
-    refk, _ = seek.kw_seeker(ex.dev, jnp.asarray(h), jnp.ones(len(h), bool),
+    refk, _ = seek.kw_seeker(ex.engine, jnp.asarray(h), jnp.ones(len(h), bool),
                              m_cap=m_cap, n_tables=idx.n_tables)
     assert bool(jnp.all(gotk == refk)), "KW mismatch"
 
@@ -48,7 +47,7 @@ SCRIPT = textwrap.dedent("""
     h3 = hash_array(keys); m3 = ex3._mcap_for(h3)
     tgt = np.array([float(v) for v in target])
     qb = (tgt >= tgt.mean()).astype(np.int8)
-    ref3, _ = seek.c_seeker(ex3.dev, jnp.asarray(h3), jnp.ones(len(h3), bool),
+    ref3, _ = seek.c_seeker(ex3.engine, jnp.asarray(h3), jnp.ones(len(h3), bool),
                             jnp.asarray(qb), m_cap=m3, row_cap=8,
                             n_tables=idx3.n_tables, max_cols=idx3.max_cols,
                             h_sample=256, row_stride=idx3.row_stride)

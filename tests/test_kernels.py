@@ -85,6 +85,35 @@ def test_superkey_containment_property(seed):
         assert bool(got[i, i])
 
 
+@pytest.mark.parametrize("t,m", [(8, 64), (24, 128), (5, 32)])
+def test_superkey_rows_sweep(t, m):
+    """Rowwise candidate-containment variant (the MC bloom stage)."""
+    from repro.kernels.superkey_filter.ref import superkey_filter_rows_ref
+    rng = np.random.default_rng(t * 10 + m)
+    sk_lo = rng.integers(0, 2 ** 32, (t, m), dtype=np.uint32)
+    sk_hi = rng.integers(0, 2 ** 32, (t, m), dtype=np.uint32)
+    q_lo = sk_lo[:, 0] & rng.integers(0, 2 ** 32, t, dtype=np.uint32)
+    q_hi = rng.integers(0, 2 ** 32, t, dtype=np.uint32)
+    want = superkey_filter_rows_ref(*map(jnp.asarray,
+                                         (sk_lo, sk_hi, q_lo, q_hi)))
+    got = sk.filter_candidates(*map(jnp.asarray, (sk_lo, sk_hi, q_lo, q_hi)),
+                               use_kernel=True, interpret=True, t_block=4)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("d", [128, 2048, 5000])
+def test_qcr_segments_sweep(d):
+    """Fused segment epilogue (the C seeker scoring stage)."""
+    from repro.kernels.qcr_score.ref import qcr_segments_ref
+    rng = np.random.default_rng(d)
+    n_all = rng.integers(0, 12, d).astype(np.float32)
+    n_agree = np.minimum(rng.integers(0, 12, d), n_all).astype(np.float32)
+    want = qcr_segments_ref(jnp.asarray(n_agree), jnp.asarray(n_all))
+    got = qc.score_segments(jnp.asarray(n_agree), jnp.asarray(n_all),
+                            use_kernel=True, interpret=True, d_block=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
 @pytest.mark.parametrize("g,h", [(64, 32), (128, 64), (200, 128)])
 def test_qcr_sweep(g, h):
     rng = np.random.default_rng(g + h)

@@ -1,0 +1,222 @@
+"""MatchEngine: backend parity (searchsorted vs Pallas bucket probe in
+interpret mode), kernel wiring, retrace-free serving, batched serve_many."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import seekers as seek
+from repro.core.executor import Executor
+from repro.core.hashing import MISSING, hash_array
+from repro.core.index import build_index
+from repro.core.lake import (DataLake, Table, correlation_lake,
+                             mc_joinable_lake, synthetic_lake)
+from repro.core.match import MatchEngine, probe_sorted
+from repro.core.plan import Combiners, Plan, Seekers
+
+
+def random_lake(seed, n_tables=12, numeric=False):
+    rng = np.random.default_rng(seed)
+    tables = []
+    for t in range(n_tables):
+        nr = int(rng.integers(4, 14))
+        cols = [[f"v{int(x)}" for x in rng.integers(0, 50, nr)]
+                for _ in range(int(rng.integers(1, 4)))]
+        if numeric:
+            cols.append([float(x) for x in rng.normal(0, 1, nr)])
+        tables.append(Table(f"t{t}", cols))
+    return DataLake(tables)
+
+
+def executors(lake, **kw):
+    idx = build_index(lake)
+    return (Executor(idx, backend="sorted", **kw),
+            Executor(idx, backend="bucket", interpret=True, **kw))
+
+
+# --------------------------------------------------------------------------
+# probe-level parity
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_probe_backend_parity(seed):
+    lake = random_lake(seed)
+    ref_ex, ker_ex = executors(lake)
+    rng = np.random.default_rng(seed + 100)
+    # mix of hits, misses, duplicates + masked padding
+    vals = [f"v{int(x)}" for x in rng.integers(0, 60, 24)]
+    h = np.concatenate([hash_array(vals),
+                        np.full(8, MISSING, np.uint32)])
+    qm = np.arange(len(h)) < 24
+    for m_cap in (4, 64):
+        args = (jnp.asarray(h), jnp.asarray(qm), m_cap)
+        p_ref, v_ref, o_ref = ref_ex.engine.probe(*args)
+        p_ker, v_ker, o_ker = ker_ex.engine.probe(*args)
+        np.testing.assert_array_equal(np.asarray(v_ref), np.asarray(v_ker))
+        np.testing.assert_array_equal(
+            np.where(np.asarray(v_ref), np.asarray(p_ref), -1),
+            np.where(np.asarray(v_ker), np.asarray(p_ker), -1))
+        assert int(o_ref) == int(o_ker)
+
+
+# --------------------------------------------------------------------------
+# seeker-level parity: kernel backend must be bit-identical on every seeker
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [3, 4])
+def test_sc_kw_backend_parity(seed):
+    lake = random_lake(seed)
+    ref_ex, ker_ex = executors(lake)
+    rng = np.random.default_rng(seed)
+    vals = [f"v{int(x)}" for x in rng.integers(0, 60, 15)]
+    for kind in ("SC", "KW"):
+        spec = getattr(Seekers, kind)(vals, k=lake.n_tables)
+        a = ref_ex.run_seeker(spec)
+        b = ker_ex.run_seeker(spec)
+        np.testing.assert_array_equal(np.asarray(a.scores),
+                                      np.asarray(b.scores))
+        np.testing.assert_array_equal(np.asarray(a.mask), np.asarray(b.mask))
+
+
+def test_mc_backend_parity():
+    from conftest import brute_force_mc
+    lake, tuples, _ = mc_joinable_lake(seed=6)
+    ref_ex, ker_ex = executors(lake)
+    spec = Seekers.MC(tuples, k=lake.n_tables)
+    a = ref_ex.run_seeker(spec)
+    b = ker_ex.run_seeker(spec)
+    np.testing.assert_array_equal(np.asarray(a.scores), np.asarray(b.scores))
+    np.testing.assert_array_equal(np.asarray(a.scores).astype(int),
+                                  brute_force_mc(lake, tuples))
+
+
+def test_c_backend_parity():
+    lake, keys, target, _ = correlation_lake(n_tables=20, seed=7)
+    ref_ex, ker_ex = executors(lake)
+    spec = Seekers.Correlation(keys, target, k=10, h=256)
+    a = ref_ex.run_seeker(spec)
+    b = ker_ex.run_seeker(spec)
+    np.testing.assert_array_equal(np.asarray(a.scores), np.asarray(b.scores))
+
+
+def test_plan_backend_parity():
+    """A full optimized plan (mask threading + compaction stages) agrees
+    across backends."""
+    lake = synthetic_lake(n_tables=40, rows=20, vocab=300, seed=8)
+    ref_ex, ker_ex = executors(lake)
+    t0 = lake.tables[2]
+    plan = Plan()
+    plan.add("a", Seekers.SC(list(t0.columns[0][:8]), k=40))
+    plan.add("b", Seekers.MC([(t0.columns[0][r], t0.columns[1][r])
+                              for r in range(5)], k=40))
+    plan.add("out", Combiners.Intersect(k=10), ["a", "b"])
+    ra, _ = ref_ex.run(plan, optimize=True)
+    rb, _ = ker_ex.run(plan, optimize=True)
+    np.testing.assert_array_equal(np.asarray(ra.scores),
+                                  np.asarray(rb.scores))
+    np.testing.assert_array_equal(np.asarray(ra.mask), np.asarray(rb.mask))
+
+
+# --------------------------------------------------------------------------
+# layout + free-function invariants
+# --------------------------------------------------------------------------
+
+def test_padded_buckets_matches_loop_reference(small_index):
+    """The vectorized layout equals the per-bucket loop construction."""
+    import repro.core.hashing as hashing
+    width = 16
+    bh, bp, ovf = small_index.padded_buckets(width)
+    nb = 1 << small_index.bucket_bits
+    bh2 = np.full((nb, width), hashing.MISSING, np.uint32)
+    bp2 = np.full((nb, width), -1, np.int32)
+    ovf2 = 0
+    starts = small_index.bucket_offsets
+    for b in range(nb):
+        s, e = int(starts[b]), int(starts[b + 1])
+        n = min(e - s, width)
+        ovf2 += max(e - s - width, 0)
+        bh2[b, :n] = small_index.cell_hash[s:s + n]
+        bp2[b, :n] = np.arange(s, s + n)
+    np.testing.assert_array_equal(bh, bh2)
+    np.testing.assert_array_equal(bp, bp2)
+    assert ovf == ovf2
+
+
+def test_probe_sorted_masks_padding_overflow(small_index):
+    """Padded (masked) queries contribute no matches and no overflow."""
+    h = np.full(8, MISSING, np.uint32)
+    qm = np.zeros(8, bool)
+    pidx, valid, ovf = probe_sorted(jnp.asarray(small_index.cell_hash),
+                                    jnp.asarray(h), jnp.asarray(qm), 4)
+    assert not bool(valid.any())
+    assert int(ovf) == 0
+
+
+def test_lossy_bucket_width_rejected(small_index):
+    """A layout narrower than the fullest bucket would silently drop
+    matches — construction must refuse it."""
+    need = small_index.max_bucket_count()
+    with pytest.raises(ValueError, match="fullest bucket"):
+        MatchEngine.from_index(small_index, backend="bucket",
+                               bucket_width=need - 1)
+    with pytest.raises(ValueError, match="backend"):
+        MatchEngine.from_index(small_index, backend="btree")
+
+
+def test_num_perm_dtype_is_i32(small_index):
+    assert small_index.num_perm.dtype == np.int32
+    assert small_index.num_rowkey.dtype == np.int32
+
+
+# --------------------------------------------------------------------------
+# retrace-free serving
+# --------------------------------------------------------------------------
+
+def _mixed_plan(lake, rng, n_vals, n_tuples):
+    t = lake.tables[int(rng.integers(0, lake.n_tables))]
+    vals = [t.columns[0][int(rng.integers(0, t.n_rows))] for _ in range(n_vals)]
+    tuples = [(t.columns[0][r], t.columns[1][r])
+              for r in rng.choice(t.n_rows, n_tuples, replace=False)]
+    plan = Plan()
+    plan.add("sc", Seekers.SC(vals, k=20))
+    plan.add("kw", Seekers.KW(vals[: n_vals // 2], k=20))
+    plan.add("mc", Seekers.MC(tuples, k=20))
+    plan.add("out", Combiners.Intersect(k=10), ["sc", "kw", "mc"])
+    return plan
+
+
+def test_repeat_query_zero_retrace():
+    """A new query set in the same capacity bucket compiles nothing new."""
+    lake = synthetic_lake(n_tables=50, rows=24, vocab=600, seed=9)
+    ex = Executor(build_index(lake))
+    rng = np.random.default_rng(0)
+    ex.run(_mixed_plan(lake, rng, 10, 5), optimize=True)     # warm the cache
+    before = dict(seek.TRACE_COUNTS)
+    for _ in range(3):      # same bucket: n_vals<=16 pad, n_tuples<=8 pad
+        ex.run(_mixed_plan(lake, rng, int(rng.integers(6, 14)),
+                           int(rng.integers(3, 8))), optimize=True)
+    assert dict(seek.TRACE_COUNTS) == before
+
+
+def test_capacity_ladder_quantizes():
+    lake = synthetic_lake(n_tables=30, rows=20, vocab=400, seed=10)
+    ex = Executor(build_index(lake))
+    assert ex._quantize_cap(1) == ex.cap_ladder[0]
+    assert ex._quantize_cap(65) == 128
+    assert ex._quantize_cap(10 ** 9) == ex.cap_ladder[-1]
+    ex8 = Executor(build_index(lake), m_cap_max=8)
+    assert ex8.cap_ladder == (8,)
+    ex4k = Executor(build_index(lake), m_cap_max=4096)
+    assert ex4k.cap_ladder[-1] == 4096       # caps above the ladder honored
+    assert ex4k._quantize_cap(2000) == 4096
+
+
+def test_serve_many_matches_serial():
+    from repro.serve.engine import DiscoveryEngine
+    lake = synthetic_lake(n_tables=40, rows=20, vocab=300, seed=11)
+    eng = DiscoveryEngine(lake)
+    rng = np.random.default_rng(1)
+    plans = [_mixed_plan(lake, rng, 8, 4) for _ in range(4)]
+    serial = [eng.serve(p) for p in plans]
+    batched = eng.serve_many(plans)
+    for a, b in zip(serial, batched):
+        assert a.table_ids == b.table_ids

@@ -17,7 +17,7 @@ from repro.core.plan import Seekers
 def raw_sc_scores(ex, values):
     h = hash_array(values)
     scores, ovf = seek.sc_seeker(
-        ex.dev, jnp.asarray(h), jnp.ones(len(h), bool),
+        ex.engine, jnp.asarray(h), jnp.ones(len(h), bool),
         m_cap=ex._mcap_for(h), n_tables=ex.n_tables, max_cols=ex.max_cols)
     return np.asarray(scores), int(ovf)
 
@@ -43,7 +43,7 @@ def test_kw_exact(small_lake, small_executor):
     vals = [small_lake.tables[1].columns[0][i] for i in range(8)]
     h = hash_array(vals)
     scores, _ = seek.kw_seeker(
-        small_executor.dev, jnp.asarray(h), jnp.ones(len(h), bool),
+        small_executor.engine, jnp.asarray(h), jnp.ones(len(h), bool),
         m_cap=small_executor._mcap_for(h), n_tables=small_lake.n_tables)
     np.testing.assert_array_equal(np.asarray(scores),
                                   brute_force_kw(small_lake, vals))
@@ -73,10 +73,10 @@ def test_mc_superkey_is_pure_filter(small_lake, small_executor):
     lo, hi = split_u64(qks)
     kw = dict(m_cap=64, n_tables=small_lake.n_tables, n_cols=2,
               row_stride=small_executor.index.row_stride)
-    with_sk, _, _ = seek.mc_seeker(small_executor.dev, jnp.asarray(th),
+    with_sk, _, _ = seek.mc_seeker(small_executor.engine, jnp.asarray(th),
                                    jnp.asarray(init), jnp.asarray(lo),
                                    jnp.asarray(hi), use_superkey=True, **kw)
-    without, _, _ = seek.mc_seeker(small_executor.dev, jnp.asarray(th),
+    without, _, _ = seek.mc_seeker(small_executor.engine, jnp.asarray(th),
                                    jnp.asarray(init), jnp.asarray(lo),
                                    jnp.asarray(hi), use_superkey=False, **kw)
     np.testing.assert_array_equal(np.asarray(with_sk), np.asarray(without))
@@ -108,7 +108,7 @@ def test_allowed_mask_is_exact_restriction(small_lake, small_executor):
     allowed[::3] = True
     h = hash_array(vals)
     got, _ = seek.sc_seeker(
-        small_executor.dev, jnp.asarray(h), jnp.ones(len(h), bool),
+        small_executor.engine, jnp.asarray(h), jnp.ones(len(h), bool),
         m_cap=small_executor._mcap_for(h), n_tables=small_lake.n_tables,
         max_cols=small_executor.max_cols, allowed=jnp.asarray(allowed))
     np.testing.assert_array_equal(np.asarray(got), np.where(allowed, full, 0))
