@@ -1,6 +1,7 @@
 """Table III analogue: four complex discovery tasks, each implemented with
-(1) BLEND (optimized), (2) B-NO (no plan optimizer), (3) the federated
-baseline systems, measuring runtime / LOC / #systems / #indexes."""
+(1) BLEND (optimized, via the BlendQL Session API), (2) B-NO (no plan
+optimizer), (3) the federated baseline systems, measuring runtime / LOC /
+#systems / #indexes."""
 from __future__ import annotations
 
 import inspect
@@ -8,12 +9,13 @@ import time
 
 import numpy as np
 
+import blend
 from benchmarks.common import row, save_json, timeit
 from repro.core.baselines import JosieLike, MateLike, QcrLike
 from repro.core.executor import Executor
 from repro.core.index import build_index
 from repro.core.lake import correlation_lake, mc_joinable_lake, synthetic_lake
-from repro.core.plan import Combiners, Plan, Seekers
+from repro.query.session import Session
 
 
 def _loc(fn) -> int:
@@ -22,12 +24,8 @@ def _loc(fn) -> int:
 
 
 # ------------------------------------------------------------------ task 1
-def negative_examples_blend(ex, pos, neg):
-    plan = Plan()
-    plan.add("pos", Seekers.MC(pos, k=60))
-    plan.add("neg", Seekers.MC(neg, k=60))
-    plan.add("out", Combiners.Difference(k=20), ["pos", "neg"])
-    return plan
+def negative_examples_blend(pos, neg):
+    return (blend.mc(pos, k=60) - blend.mc(neg, k=60)).top(20)
 
 
 def negative_examples_baseline(mate, pos, neg):
@@ -52,12 +50,8 @@ def negative_examples_baseline(mate, pos, neg):
 
 
 # ------------------------------------------------------------------ task 2
-def imputation_blend(ex, complete, partial):
-    plan = Plan()
-    plan.add("examples", Seekers.MC(complete, k=60))
-    plan.add("query", Seekers.SC(partial, k=60))
-    plan.add("out", Combiners.Intersect(k=10), ["examples", "query"])
-    return plan
+def imputation_blend(complete, partial):
+    return (blend.mc(complete, k=60) & blend.sc(partial, k=60)).top(10)
 
 
 def imputation_baseline(mate, josie, complete, partial):
@@ -68,12 +62,9 @@ def imputation_baseline(mate, josie, complete, partial):
 
 
 # ------------------------------------------------------------------ task 3
-def feature_discovery_blend(ex, join_vals, target, feature):
-    plan = Plan()
-    plan.add("target_corr", Seekers.Correlation(join_vals, target, k=30))
-    plan.add("multicol", Seekers.Correlation(join_vals, feature, k=30))
-    plan.add("out", Combiners.Difference(k=10), ["target_corr", "multicol"])
-    return plan
+def feature_discovery_blend(join_vals, target, feature):
+    return (blend.corr(join_vals, target, k=30)
+            - blend.corr(join_vals, feature, k=30)).top(10)
 
 
 def feature_discovery_baseline(qcr, mate, join_vals, target, feature):
@@ -83,16 +74,10 @@ def feature_discovery_baseline(qcr, mate, join_vals, target, feature):
 
 
 # ------------------------------------------------------------------ task 4
-def multi_objective_blend(ex, keywords, cols, join_vals, target):
-    plan = Plan()
-    plan.add("kw", Seekers.KW(keywords, k=10))
-    for i, col in enumerate(cols):
-        plan.add(f"col{i}", Seekers.SC(col, k=40))
-    plan.add("counter", Combiners.Counter(k=10),
-             [f"col{i}" for i in range(len(cols))])
-    plan.add("corr", Seekers.Correlation(join_vals, target, k=10))
-    plan.add("out", Combiners.Union(k=40), ["kw", "counter", "corr"])
-    return plan
+def multi_objective_blend(keywords, cols, join_vals, target):
+    votes = blend.counter(*[blend.sc(col, k=40) for col in cols], k=10)
+    return (blend.kw(keywords, k=10) | votes
+            | blend.corr(join_vals, target, k=10)).top(40)
 
 
 def multi_objective_baseline(josie, qcr, union_base, keywords, cols,
@@ -111,10 +96,10 @@ def main():
                                                 seed=32)
     lake_gen = synthetic_lake(n_tables=300, rows=60, vocab=1500, seed=33)
 
-    # shared systems
-    ex_mc = Executor(build_index(lake_mc))
-    ex_cr = Executor(build_index(lake_cr))
-    ex_gen = Executor(build_index(lake_gen))
+    # shared systems: one Session per lake (the BlendQL entry point)
+    sess_mc = Session(Executor(build_index(lake_mc)), lake=lake_mc)
+    sess_cr = Session(Executor(build_index(lake_cr)), lake=lake_cr)
+    sess_gen = Session(Executor(build_index(lake_gen)), lake=lake_gen)
     mate_mc, mate_gen = MateLike(lake_mc), MateLike(lake_gen)
     josie_gen = JosieLike(lake_gen)
     qcr_cr = QcrLike(lake_cr)
@@ -129,27 +114,27 @@ def main():
 
     tasks = {
         "negative_examples": (
-            lambda opt: ex_mc.run(negative_examples_blend(ex_mc, pos, neg),
-                                  optimize=opt),
+            lambda opt: sess_mc.query(negative_examples_blend(pos, neg),
+                                      optimize=opt).ids,
             lambda: negative_examples_baseline(mate_mc, pos, neg),
             negative_examples_blend, negative_examples_baseline, 1, "Multi"),
         "imputation": (
-            lambda opt: ex_gen.run(imputation_blend(ex_gen, complete, partial),
-                                   optimize=opt),
+            lambda opt: sess_gen.query(imputation_blend(complete, partial),
+                                       optimize=opt).ids,
             lambda: imputation_baseline(mate_gen, josie_gen, complete, partial),
             imputation_blend, imputation_baseline, 2, "Multi"),
         "feature_discovery": (
-            lambda opt: ex_cr.run(feature_discovery_blend(ex_cr, keys, target,
-                                                          feature),
-                                  optimize=opt),
+            lambda opt: sess_cr.query(feature_discovery_blend(keys, target,
+                                                              feature),
+                                      optimize=opt).ids,
             lambda: feature_discovery_baseline(qcr_cr, None, keys, target,
                                                feature),
             feature_discovery_blend, feature_discovery_baseline, 2, "Multi"),
         "multi_objective": (
-            lambda opt: ex_gen.run(multi_objective_blend(
-                ex_gen, [t0.columns[0][0]], [list(t0.columns[0][:8]),
-                                             list(t0.columns[1][:8])],
-                list(t0.columns[0][:15]), list(range(15))), optimize=opt),
+            lambda opt: sess_gen.query(multi_objective_blend(
+                [t0.columns[0][0]], [list(t0.columns[0][:8]),
+                                     list(t0.columns[1][:8])],
+                list(t0.columns[0][:15]), list(range(15))), optimize=opt).ids,
             lambda: multi_objective_baseline(
                 josie_gen, QcrLike(lake_gen), union_gen, [t0.columns[0][0]],
                 None, list(t0.columns[0][:15]), list(range(15)), 5),

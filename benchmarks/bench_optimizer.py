@@ -8,18 +8,19 @@ import time
 
 import numpy as np
 
+import blend
 from benchmarks.common import row, save_json
 from repro.core.cost_model import train_cost_model
 from repro.core.executor import Executor
 from repro.core.index import build_index
 from repro.core.lake import synthetic_lake
-from repro.core.plan import Combiners, Plan, Seekers
+from repro.query.session import Session
 
 
 def _rand_seeker(lake, rng, kinds):
     """Query sizes span two orders of magnitude (the paper samples real
     columns, whose cardinalities vary similarly) — this asymmetry is what
-    the cost model exploits."""
+    the cost model exploits.  Returns a BlendQL IR leaf."""
     kind = rng.choice(kinds)
     t = lake.tables[int(rng.integers(0, lake.n_tables))]
     heavy = rng.random() < 0.5
@@ -27,51 +28,54 @@ def _rand_seeker(lake, rng, kinds):
         else int(rng.integers(3, 8))
     rows = rng.choice(t.n_rows, n, replace=False)
     if kind == "SC":
-        return Seekers.SC([t.columns[0][r] for r in rows], k=20)
+        return blend.sc([t.columns[0][r] for r in rows], k=20)
     if kind == "KW":
-        return Seekers.KW([t.columns[1][r] for r in rows], k=20)
+        return blend.kw([t.columns[1][r] for r in rows], k=20)
     if kind == "MC":
-        return Seekers.MC([(t.columns[0][r], t.columns[1][r]) for r in rows],
-                          k=20)
-    return Seekers.Correlation([t.columns[0][r] for r in rows],
-                               list(np.arange(n, dtype=float)), k=20)
+        return blend.mc([(t.columns[0][r], t.columns[1][r]) for r in rows],
+                        k=20)
+    return blend.corr([t.columns[0][r] for r in rows],
+                      list(np.arange(n, dtype=float)), k=20)
 
 
-def _time_order(ex, specs, order):
+def _time_order(ex, leaves, order):
     """Execute seekers in the given order with mask threading (the EG path)."""
     t0 = time.perf_counter()
     allowed = None
     from repro.core import combiners as comb
     results = []
     for i in order:
-        rs = ex.run_seeker(specs[i], allowed=allowed)
+        rs = ex.run_seeker(leaves[i].spec(), allowed=allowed)
         results.append(rs)
         allowed = rs.mask if allowed is None else allowed & rs.mask
     comb.intersect(results, 10).scores.block_until_ready()
     return time.perf_counter() - t0
 
 
-def run_group(name, kinds, ex, lake, model, n_plans=20, seed=0):
+def run_group(name, kinds, session, lake, model, n_plans=20, seed=0):
+    ex = session.executor
     rng = np.random.default_rng(seed)
     rand_t, blend_t, ideal_t, correct = [], [], [], 0
     for _ in range(n_plans):
-        specs = [_rand_seeker(lake, rng, kinds) for _ in range(2)]
+        leaves = [_rand_seeker(lake, rng, kinds) for _ in range(2)]
+        while leaves[1] == leaves[0]:       # distinct, or the IR folds X & X
+            leaves[1] = _rand_seeker(lake, rng, kinds)
         # warmup compile for both orders
         for order in ([0, 1], [1, 0]):
-            _time_order(ex, specs, order)
+            _time_order(ex, leaves, order)
         times = {}
         for order in ([0, 1], [1, 0]):
-            times[tuple(order)] = min(_time_order(ex, specs, order)
+            times[tuple(order)] = min(_time_order(ex, leaves, order)
                                       for _ in range(2))
         ideal_order = min(times, key=times.get)
-        # BLEND's choice via optimizer
-        plan = Plan()
-        plan.add("s0", specs[0])
-        plan.add("s1", specs[1])
-        plan.add("out", Combiners.Intersect(k=10), ["s0", "s1"])
+        # BLEND's choice: compile the BlendQL intersection, rank the EG
+        compiled = session.compile(leaves[0] & leaves[1], top=10)
         from repro.core.optimizer import optimize
-        ep = optimize(plan, ex.seeker_stats, model)
-        blend_order = tuple(int(s[1]) for s in ep.groups["out"].seekers)
+        ep = optimize(compiled.plan, ex.seeker_stats, model)
+        leaf_idx = {compiled.node_of[leaf]: i
+                    for i, leaf in enumerate(leaves)}
+        blend_order = tuple(leaf_idx[s] for s in
+                            ep.groups[compiled.plan.output].seekers)
         rand_order = tuple(rng.permutation(2))
         rand_t.append(times[rand_order])
         blend_t.append(times[blend_order])
@@ -93,13 +97,14 @@ def run_group(name, kinds, ex, lake, model, n_plans=20, seed=0):
 
 def main():
     lake = synthetic_lake(n_tables=400, rows=80, vocab=1200, seed=41)
-    ex = Executor(build_index(lake))
-    model = train_cost_model(ex, lake, n_samples=30, seed=1)
+    sess = Session(Executor(build_index(lake)), lake=lake)
+    model = train_cost_model(sess.executor, lake, n_samples=30, seed=1)
     out = {
-        "mixed": run_group("mixed", ["SC", "KW", "MC", "C"], ex, lake, model),
-        "SC": run_group("SC", ["SC"], ex, lake, model, seed=2),
-        "MC": run_group("MC", ["MC"], ex, lake, model, seed=3),
-        "C": run_group("C", ["C"], ex, lake, model, seed=4),
+        "mixed": run_group("mixed", ["SC", "KW", "MC", "C"], sess, lake,
+                           model),
+        "SC": run_group("SC", ["SC"], sess, lake, model, seed=2),
+        "MC": run_group("MC", ["MC"], sess, lake, model, seed=3),
+        "C": run_group("C", ["C"], sess, lake, model, seed=4),
     }
     save_json("table4_optimizer", out)
     return out

@@ -1,0 +1,143 @@
+"""Benchmark runner: exercise the paper workloads through the Session API
+and record the perf trajectory.
+
+Writes ``BENCH_2.json`` (repo root, uploaded as a CI artifact): per-workload
+ops/sec + latency percentiles, all measured through ``blend.connect`` /
+``session.query`` / ``session.sql`` / ``DiscoveryEngine.serve_many`` — the
+same code paths users hit.
+
+    PYTHONPATH=src python benchmarks/run_all.py [--out PATH] [--full]
+
+``--full`` additionally runs the paper-table benchmark suites
+(benchmarks/run.py) and folds their per-table JSON into the payload.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+import time
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+for p in (REPO_ROOT, REPO_ROOT / "src"):       # runnable as a plain script
+    if str(p) not in sys.path:
+        sys.path.insert(0, str(p))
+
+import numpy as np
+
+import blend
+from repro.core.cost_model import train_cost_model
+from repro.core.lake import synthetic_lake
+from repro.serve.engine import DiscoveryEngine
+
+
+def _stats(seconds: list) -> dict:
+    a = np.asarray(seconds)
+    return {
+        "iters": int(a.size),
+        "ops_per_sec": float(a.size / a.sum()) if a.sum() else 0.0,
+        "mean_ms": float(a.mean() * 1e3),
+        "p50_ms": float(np.percentile(a, 50) * 1e3),
+        "p95_ms": float(np.percentile(a, 95) * 1e3),
+    }
+
+
+def _measure(fn, warmup: int = 2, iters: int = 10) -> dict:
+    for _ in range(warmup):
+        fn()
+    seconds = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        seconds.append(time.perf_counter() - t0)
+    return _stats(seconds)
+
+
+def _requests(lake, rng, n: int):
+    from examples.serve_discovery import build_request
+    kinds = ["imputation", "union", "enrichment"]
+    return [build_request(lake, rng, kinds[i % 3]) for i in range(n)]
+
+
+def main(out_path: Path, full: bool = False, iters: int = 10) -> dict:
+    rng = np.random.default_rng(7)
+    lake = synthetic_lake(n_tables=200, rows=40, vocab=1500, seed=1)
+    session = blend.connect(lake)
+    t = lake.tables[11]
+    rows = list(range(8))
+
+    impute = (blend.mc([(t.columns[0][r], t.columns[1][r]) for r in rows],
+                       k=40)
+              & blend.sc([t.columns[0][r] for r in rows], k=40)).top(10)
+    union_vote = blend.counter(
+        *[blend.sc(list(t.columns[c]), k=60) for c in range(3)], k=10)
+    negative = (blend.mc([(t.columns[0][r], t.columns[1][r])
+                          for r in rows[:5]], k=40)
+                - blend.mc([(t.columns[0][6], t.columns[1][7])], k=40)).top(10)
+    enrich_sql = (blend.kw([t.columns[0][0], t.columns[1][1]], k=10)
+                  | blend.corr([t.columns[0][r] for r in rows],
+                               list(map(float, rows)), k=10)).top(20).to_sql()
+
+    workloads = {}
+
+    workloads["query/imputation_fluent"] = _measure(
+        lambda: session.query(impute).ids, iters=iters)
+    workloads["query/imputation_noopt"] = _measure(
+        lambda: session.query(impute, optimize=False).ids, iters=iters)
+    workloads["query/union_counter"] = _measure(
+        lambda: session.query(union_vote).ids, iters=iters)
+    workloads["query/negative_examples"] = _measure(
+        lambda: session.query(negative).ids, iters=iters)
+    workloads["sql/enrichment"] = _measure(
+        lambda: session.sql(enrich_sql).ids, iters=iters)
+    workloads["compile/parse_rewrite_lower"] = _measure(
+        lambda: session.compile(enrich_sql), iters=max(iters * 20, 100))
+
+    # batched serving through the engine (12 heterogeneous requests/batch),
+    # reusing the session so the warm jit cache carries over
+    engine = DiscoveryEngine(lake, session=session)
+    engine.cost_model = train_cost_model(session.executor, lake, n_samples=10)
+    reqs = _requests(lake, rng, 12)
+    engine.serve_many(reqs)               # warm every capacity bucket
+    batch_stats = _measure(lambda: engine.serve_many(reqs),
+                           warmup=1, iters=max(iters // 2, 3))
+    batch_stats["requests_per_sec"] = \
+        batch_stats["ops_per_sec"] * len(reqs)
+    workloads["serve/batch12_mixed"] = batch_stats
+
+    payload = {
+        "bench": "BENCH_2",
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "lake": lake.stats(),
+        "workloads": workloads,
+    }
+
+    if full:
+        import subprocess
+        import sys
+        subprocess.run([sys.executable, str(REPO_ROOT / "benchmarks/run.py")],
+                       check=False)
+        results_dir = REPO_ROOT / "benchmarks" / "results"
+        payload["paper_tables"] = {
+            p.stem: json.loads(p.read_text())
+            for p in sorted(results_dir.glob("*.json"))}
+
+    out_path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {out_path}")
+    for name, s in workloads.items():
+        print(f"{name:32s} {s['ops_per_sec']:10.1f} ops/s "
+              f"p50={s['p50_ms']:.2f}ms p95={s['p95_ms']:.2f}ms")
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", type=Path, default=REPO_ROOT / "BENCH_2.json")
+    ap.add_argument("--full", action="store_true",
+                    help="also run the paper-table suites (benchmarks/run.py)")
+    ap.add_argument("--iters", type=int, default=10)
+    args = ap.parse_args()
+    main(args.out, full=args.full, iters=args.iters)

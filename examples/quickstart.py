@@ -1,22 +1,18 @@
-"""Quickstart: build a lake, build the unified index, run a discovery plan.
+"""Quickstart: build a lake, connect a session, run BlendQL queries.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core.executor import Executor
-from repro.core.index import build_index
+import blend
 from repro.core.lake import synthetic_lake
-from repro.core.plan import Combiners, Plan, Seekers
 
 
 def main():
     lake = synthetic_lake(n_tables=100, rows=30, vocab=800, seed=0)
     print("lake:", lake.stats())
 
-    index = build_index(lake)
-    print(f"unified index: {index.n_postings} postings, "
-          f"{index.storage_bytes()/1e6:.1f} MB")
-
-    ex = Executor(index)
+    session = blend.connect(lake)
+    print(f"unified index: {session.index.n_postings} postings, "
+          f"{session.index.storage_bytes()/1e6:.1f} MB")
 
     # Fig 1's task: tables containing ("HR", "Firenze")-style positive
     # examples and a set of joinable department values, minus tables with the
@@ -26,18 +22,34 @@ def main():
     outdated = [(t.columns[0][5], t.columns[1][6])]   # misaligned pair
     departments = list(t.columns[0][:12])
 
+    # fluent form: & = intersect, - = difference
+    expr = (blend.mc(positives, k=50) & blend.sc(departments, k=50)) \
+        - blend.mc(outdated, k=50)
+    res = session.query(expr, top=10)
+    print("optimized execution order:", res.info.order)
+    print("top tables:", [lake.tables[i].name for i in res.ids])
+    print(f"total {res.info.total_seconds*1000:.1f} ms "
+          f"({ {k: round(v*1000, 1) for k, v in res.info.node_seconds.items()} })")
+
+    # the same task as a BlendQL string (expr.to_sql() prints this form)
+    sql_res = session.sql(expr.top(10).to_sql())
+    assert sql_res.ids == res.ids
+    print("\nBlendQL:", expr.top(10).to_sql()[:88], "...")
+
+    # the explain transcript: logical tree, rewrite rules, ranked order,
+    # per-node timings
+    print("\n" + str(session.explain(expr, top=10)))
+
+    # legacy imperative frontend (still supported, same engine underneath)
+    from repro.core.plan import Combiners, Plan, Seekers
     plan = Plan()
     plan.add("examples", Seekers.MC(positives, k=50))
     plan.add("departments", Seekers.SC(departments, k=50))
-    plan.add("relevant", Combiners.Intersect(k=20), ["examples", "departments"])
+    plan.add("relevant", Combiners.Intersect(k=50), ["examples", "departments"])
     plan.add("outdated", Seekers.MC(outdated, k=50))
     plan.add("answer", Combiners.Difference(k=10), ["relevant", "outdated"])
-
-    rs, info = ex.run(plan, optimize=True)
-    print("optimized execution order:", info.order)
-    print("top tables:", [lake.tables[i].name for i in rs.ids()])
-    print(f"total {info.total_seconds*1000:.1f} ms "
-          f"({ {k: round(v*1000, 1) for k, v in info.node_seconds.items()} })")
+    legacy = session.query(plan)
+    print("\nlegacy Plan.add ids:", legacy.ids)
 
 
 if __name__ == "__main__":

@@ -1,39 +1,37 @@
 """End-to-end driver: serve batched discovery requests over a resident lake.
 
 This is the paper's deployment mode — the unified index lives in memory and
-heterogeneous discovery plans stream in.  Reports per-plan latency with and
-without the plan optimizer (the Table III/IV effect, live).
+heterogeneous BlendQL requests stream in.  Reports per-request latency with
+and without the plan optimizer (the Table III/IV effect, live).
 
     PYTHONPATH=src python examples/serve_discovery.py
 """
 import numpy as np
 
+import blend
 from repro.core.cost_model import train_cost_model
-from repro.core.plan import Combiners, Plan, Seekers
 from repro.serve.engine import DiscoveryEngine
 from repro.core.lake import synthetic_lake
 
 
 def build_request(lake, rng, kind):
+    """Discovery workloads as BlendQL expressions (imputation / union /
+    enrichment; every fourth enrichment request arrives as SQL text)."""
     t = lake.tables[int(rng.integers(0, lake.n_tables))]
     rows = rng.choice(t.n_rows, 8, replace=False)
-    plan = Plan()
     if kind == "imputation":
-        plan.add("mc", Seekers.MC([(t.columns[0][r], t.columns[1][r])
-                                   for r in rows], k=40))
-        plan.add("sc", Seekers.SC([t.columns[0][r] for r in rows], k=40))
-        plan.add("out", Combiners.Intersect(k=10), ["mc", "sc"])
-    elif kind == "union":
-        for c in range(min(3, t.n_cols)):
-            plan.add(f"c{c}", Seekers.SC(list(t.columns[c]), k=60))
-        plan.add("out", Combiners.Counter(k=10),
-                 [f"c{c}" for c in range(min(3, t.n_cols))])
-    else:   # enrichment
-        plan.add("kw", Seekers.KW([t.columns[0][0], t.columns[1][1]], k=10))
-        plan.add("corr", Seekers.Correlation(
-            [t.columns[0][r] for r in rows], list(map(float, range(8))), k=10))
-        plan.add("out", Combiners.Union(k=20), ["kw", "corr"])
-    return plan
+        return (blend.mc([(t.columns[0][r], t.columns[1][r]) for r in rows],
+                         k=40)
+                & blend.sc([t.columns[0][r] for r in rows], k=40)).top(10)
+    if kind == "union":
+        cols = [blend.sc(list(t.columns[c]), k=60)
+                for c in range(min(3, t.n_cols))]
+        return blend.counter(*cols, k=10)
+    # enrichment
+    expr = (blend.kw([t.columns[0][0], t.columns[1][1]], k=10)
+            | blend.corr([t.columns[0][r] for r in rows],
+                         list(map(float, range(8))), k=10)).top(20)
+    return expr.to_sql() if int(rng.integers(0, 4)) == 0 else expr
 
 
 def main():
@@ -56,12 +54,13 @@ def main():
     naive = engine.serve_many(requests, optimize=False)
     t_opt = sum(r.seconds for r in opt)
     t_naive = sum(r.seconds for r in naive)
-    print(f"served {len(requests)} plans | optimized {t_opt*1000:.0f} ms "
+    print(f"served {len(requests)} requests | optimized {t_opt*1000:.0f} ms "
           f"| naive {t_naive*1000:.0f} ms "
           f"| speedup {t_naive/max(t_opt,1e-9):.2f}x")
     for i, r in enumerate(opt[:4]):
         print(f"  req{i} ({kinds[i%3]:11s}) {r.seconds*1000:6.1f} ms "
-              f"-> tables {r.table_ids[:5]}")
+              f"-> tables {r.table_ids[:5]} "
+              f"(order {'->'.join(r.order)}, overflow {r.overflow})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,16 @@
+"""Top-level BlendQL entry point: ``import blend; blend.connect(lake)``.
+
+Thin alias over :mod:`repro.query` so user code reads like the paper's
+system name.  Everything here is re-exported; see ``repro/query/__init__.py``
+for the IR-to-paper mapping.
+"""
+from repro.query import (And, BlendQLError, Compiled, Counter, DEFAULT_RULES,
+                         Expr, Explain, Or, QueryResult, Seek, Session, Sub,
+                         connect, corr, counter, kw, lower, mc, parse,
+                         rewrite, sc)
+
+__all__ = [
+    "And", "BlendQLError", "Compiled", "Counter", "DEFAULT_RULES", "Expr",
+    "Explain", "Or", "QueryResult", "Seek", "Session", "Sub", "connect",
+    "corr", "counter", "kw", "lower", "mc", "parse", "rewrite", "sc",
+]

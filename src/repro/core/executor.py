@@ -270,7 +270,10 @@ class Executor:
                         memo[b_node.name] = b
                     else:
                         b = eval_node(node.deps[1])
+                    t0 = time.perf_counter()
                     rs = comb.difference(a, b, k)
+                    info.node_seconds[name] = time.perf_counter() - t0
+                    info.order.append(name)
                 else:
                     deps = [eval_node(d) for d in node.deps]
                     t0 = time.perf_counter()
@@ -296,10 +299,15 @@ class Executor:
         results = []
         allowed = None
         for sname in eg.seekers:
-            exclusive = len(plan.consumers(sname)) == 1
-            rs = timed_seeker(sname, plan.nodes[sname].spec,
-                              allowed=allowed if exclusive else None)
-            memo[sname] = rs
+            if sname in memo:
+                # shared seeker (>= 2 consumers, hash-consed subtree): it was
+                # executed unrestricted once already — reuse, don't re-probe
+                rs = memo[sname]
+            else:
+                exclusive = len(plan.consumers(sname)) == 1
+                rs = timed_seeker(sname, plan.nodes[sname].spec,
+                                  allowed=allowed if exclusive else None)
+                memo[sname] = rs
             results.append(rs)
             allowed = rs.mask if allowed is None else (allowed & rs.mask)
         # non-seeker deps of the combiner are evaluated normally

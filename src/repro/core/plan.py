@@ -119,10 +119,54 @@ class Plan:
     def seekers(self):
         return [n for n in self.nodes.values() if n.is_seeker]
 
+    def copy(self) -> "Plan":
+        """Shallow structural copy (nodes are immutable-by-convention; the
+        dict/order/output skeleton is duplicated so pruning a copy never
+        mutates the original)."""
+        p = Plan()
+        p.nodes = dict(self.nodes)
+        p.order = list(self.order)
+        p.output = self.output
+        return p
+
+    def reachable(self, root: str | None = None) -> set:
+        """Node names reachable from ``root`` (default: the plan output)
+        through dep edges.  Shared by ``validate`` and the BlendQL
+        rewriter's dead-subtree pruning (query/rules.py)."""
+        root = self.output if root is None else root
+        if root is None:
+            return set()
+        seen: set = set()
+        stack = [root]
+        while stack:
+            name = stack.pop()
+            if name in seen:
+                continue
+            seen.add(name)
+            stack.extend(self.nodes[name].deps)
+        return seen
+
+    def prune_unreachable(self) -> list:
+        """Remove nodes unreachable from the output; returns their names."""
+        keep = self.reachable()
+        removed = [n for n in self.order if n not in keep]
+        if removed:
+            self.nodes = {n: v for n, v in self.nodes.items() if n in keep}
+            self.order = [n for n in self.order if n in keep]
+        return removed
+
     def validate(self):
-        # acyclicity is by construction (deps must pre-exist); check reachability
+        # acyclicity is by construction (deps must pre-exist); check that
+        # every node is reachable from the output — a dead subtree means the
+        # plan author wired a dep list wrong (or wants prune_unreachable())
         if self.output is None:
             raise ValueError("empty plan")
+        reach = self.reachable()
+        dead = [n for n in self.order if n not in reach]
+        if dead:
+            raise ValueError(
+                f"nodes unreachable from output {self.output!r}: {dead} "
+                f"(Plan.prune_unreachable() drops them)")
         return True
 
     def consumers(self, name: str):

@@ -1,0 +1,52 @@
+"""BlendQL: the declarative query frontend over the BLEND engine.
+
+Layering (tentpole of the API redesign)::
+
+    blendql string --parse.py--> logical IR --rules.py--> canonical IR
+                                   (logical.py)              |
+    fluent expressions -----------------^          lower.py  v
+                                                   physical Plan
+                                                   (core/plan.py ->
+                                                    core/optimizer.py ->
+                                                    core/executor.py)
+
+IR node -> paper mapping (Blend: A Unified Data Discovery System):
+
+==============  =======================================================
+IR node         Paper construct
+==============  =======================================================
+``sc(...)``     Listing 1 / Section VI-B: single-column joinability
+                seeker (JOSIE-style top-k overlap)
+``kw(...)``     Section VI-A: keyword seeker over all cell values
+``mc(...)``     Listing 2 / Section VI-C: multi-column join seeker
+                (MATE superkeys)
+``corr(...)``   Listing 3 / Section VI-D: correlation seeker (QCR
+                sketches over join+target column pairs)
+``&  (And)``    Section VII-A Intersection combiner (SQL ``INTERSECT``);
+                execution groups + mask threading per Section VII-B
+``|  (Or)``     Section VII-A Union combiner (SQL ``UNION``)
+``-  (Sub)``    Section VII-A Difference combiner (SQL ``EXCEPT``) —
+                the Fig. 1 negative-examples workload
+``counter(..)`` Section VII-A Counter aggregator (union-table search,
+                Listing 4's per-column vote)
+``SELECT TOP``  the task-level result limit K of Listing 4
+==============  =======================================================
+
+Entry points: ``connect(lake, **executor_opts) -> Session``;
+``Session.query`` (fluent), ``Session.sql`` (BlendQL text),
+``Session.explain`` (rule + plan + timing transcript).  The legacy
+imperative ``Plan.add`` frontend lowers through the same Session.
+"""
+from repro.query.logical import (And, Counter, Expr, Or, Seek, Sub, corr,
+                                 counter, kw, mc, sc)
+from repro.query.lower import lower
+from repro.query.parse import BlendQLError, parse
+from repro.query.rules import DEFAULT_RULES, rewrite
+from repro.query.session import (Compiled, Explain, QueryResult, Session,
+                                 connect)
+
+__all__ = [
+    "And", "BlendQLError", "Compiled", "Counter", "DEFAULT_RULES", "Expr",
+    "Explain", "Or", "QueryResult", "Seek", "Session", "Sub", "connect",
+    "corr", "counter", "kw", "lower", "mc", "parse", "rewrite", "sc",
+]

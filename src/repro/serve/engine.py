@@ -7,14 +7,12 @@ deployment mode: the index is resident, queries stream in).
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.executor import Executor
-from repro.core.index import build_index
+from repro.query.session import connect
 from repro.train.step import make_prefill_step, make_serve_step
 
 
@@ -40,46 +38,89 @@ class DiscoveryResponse:
     table_ids: list
     seconds: float
     plan_nodes: int
+    # per-request ExecInfo (previously dropped on the floor): what executed,
+    # in what order, how long each node took, and the match-buffer overflow —
+    # session.explain and the benchmark runner read these without re-running
+    node_seconds: dict = field(default_factory=dict)
+    order: list = field(default_factory=list)
+    overflow: int = 0
+    applied_rules: list = field(default_factory=list)
+
+    @property
+    def total_node_seconds(self) -> float:
+        return sum(self.node_seconds.values())
 
 
 class DiscoveryEngine:
+    """Serves discovery requests (BlendQL expressions, SQL strings, or
+    legacy ``Plan`` objects) over a resident lake via one ``Session``."""
+
     def __init__(self, lake, cost_model=None, backend: str = "sorted",
-                 interpret: bool = False):
+                 interpret: bool = False, session=None):
+        if session is not None:
+            if backend != "sorted" or interpret:
+                raise ValueError("backend/interpret are fixed by the given "
+                                 "session; pass them to connect() instead")
+            if cost_model is not None:
+                session.cost_model = cost_model
+            self.session = session
+        else:
+            self.session = connect(lake, cost_model=cost_model,
+                                   backend=backend, interpret=interpret)
         self.lake = lake
-        self.index = build_index(lake)
-        self.executor = Executor(self.index, backend=backend,
-                                 interpret=interpret)
-        self.cost_model = cost_model
 
-    def serve(self, plan, optimize: bool = True) -> DiscoveryResponse:
-        t0 = time.perf_counter()
-        rs, info = self.executor.run(plan, optimize=optimize,
-                                     cost_model=self.cost_model)
-        return DiscoveryResponse(table_ids=[int(t) for t in rs.ids()],
-                                 seconds=time.perf_counter() - t0,
-                                 plan_nodes=len(plan.nodes))
+    # Session owns the index/executor/cost model; keep the old attribute
+    # surface as thin forwarders.
+    @property
+    def index(self):
+        return self.session.index
 
-    def serve_many(self, plans, optimize: bool = True):
-        """Batched serving: every seeker of every plan is dispatched without
-        host synchronization (no per-seeker ``block_until_ready``, no
+    @property
+    def executor(self):
+        return self.session.executor
+
+    @property
+    def cost_model(self):
+        return self.session.cost_model
+
+    @cost_model.setter
+    def cost_model(self, model):
+        self.session.cost_model = model
+
+    def serve(self, query, optimize: bool = True) -> DiscoveryResponse:
+        res = self.session.query(query, optimize=optimize)
+        return DiscoveryResponse(table_ids=res.ids, seconds=res.seconds,
+                                 plan_nodes=len(res.compiled.plan.nodes),
+                                 node_seconds=dict(res.info.node_seconds),
+                                 order=list(res.info.order),
+                                 overflow=res.info.overflow,
+                                 applied_rules=list(res.applied_rules))
+
+    def serve_many(self, queries, optimize: bool = True):
+        """Batched serving: every seeker of every request is dispatched
+        without host synchronization (no per-seeker ``block_until_ready``, no
         data-dependent compaction stages), value hashing is deduped across
-        plans through the executor's hash cache, and the device is drained
+        requests through the executor's hash cache, and the device is drained
         exactly once before the responses are materialized.
 
-        ``seconds`` is that plan's own dispatch (trace/enqueue) time plus an
-        equal share of the single device drain — device time within the
-        batch is fungible, so only the host-side cost is attributed."""
+        ``seconds`` is that request's own compile+dispatch (trace/enqueue)
+        time plus an equal share of the single device drain — device time
+        within the batch is fungible, so only the host-side cost is
+        attributed."""
+        session = self.session
         pending = []
-        for p in plans:
+        for q in queries:
             t0 = time.perf_counter()
-            rs, info = self.executor.run(p, optimize=optimize,
-                                         cost_model=self.cost_model,
-                                         sync=False)
-            pending.append((rs, time.perf_counter() - t0))
+            res = session.query(q, optimize=optimize, sync=False)
+            pending.append((res, time.perf_counter() - t0))
         t0 = time.perf_counter()
-        jax.block_until_ready([rs.scores for rs, _ in pending])
-        drain_share = (time.perf_counter() - t0) / max(len(plans), 1)
-        return [DiscoveryResponse(table_ids=[int(t) for t in rs.ids()],
-                                  seconds=dispatch_s + drain_share,
-                                  plan_nodes=len(p.nodes))
-                for p, (rs, dispatch_s) in zip(plans, pending)]
+        jax.block_until_ready([res.scores for res, _ in pending])
+        drain_share = (time.perf_counter() - t0) / max(len(pending), 1)
+        return [DiscoveryResponse(
+                    table_ids=res.ids, seconds=dispatch_s + drain_share,
+                    plan_nodes=len(res.compiled.plan.nodes),
+                    node_seconds=dict(res.info.node_seconds),
+                    order=list(res.info.order),
+                    overflow=res.info.overflow,
+                    applied_rules=list(res.applied_rules))
+                for res, dispatch_s in pending]
