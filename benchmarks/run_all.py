@@ -4,7 +4,9 @@ and record the perf trajectory.
 Writes ``BENCH_2.json`` (repo root, uploaded as a CI artifact): per-workload
 ops/sec + latency percentiles, all measured through ``blend.connect`` /
 ``session.query`` / ``session.sql`` / ``DiscoveryEngine.serve_many`` — the
-same code paths users hit.
+same code paths users hit.  Also writes ``BENCH_3.json`` with the LiveLake
+mutation workloads: ``mutate/add_table_p50``, ``mutate/compact`` and
+``snapshot/load_vs_rebuild`` (index-build vs snapshot-restore speedup).
 
     PYTHONPATH=src python benchmarks/run_all.py [--out PATH] [--full]
 
@@ -59,6 +61,76 @@ def _requests(lake, rng, n: int):
     from examples.serve_discovery import build_request
     kinds = ["imputation", "union", "enrichment"]
     return [build_request(lake, rng, kinds[i % 3]) for i in range(n)]
+
+
+def live_workloads(lake, iters: int = 5) -> dict:
+    """LiveLake mutation + persistence workloads (BENCH_3)."""
+    import tempfile
+
+    from repro.core.index import build_index
+    from repro.core.lake import Table
+
+    rng = np.random.default_rng(3)
+
+    def fresh_table(i, rows=40):
+        return Table(f"bench_add_{i}",
+                     [[f"tok_{int(x)}" for x in rng.integers(0, 1500, rows)],
+                      [f"tok_{int(x)}" for x in rng.integers(0, 1500, rows)],
+                      [float(x) for x in np.round(rng.normal(0, 5, rows), 3)]])
+
+    workloads = {}
+
+    # baseline: what a mutation would cost without LiveLake
+    rebuild_s = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        build_index(lake)
+        rebuild_s.append(time.perf_counter() - t0)
+    rebuild_p50 = float(np.percentile(rebuild_s, 50))
+
+    # mutate/add_table_p50: one 40-row table in, one delta segment out
+    session = blend.connect(lake, live=True)
+    session.query(blend.kw(["tok_1"], k=5))        # resident + warm
+    k = [0]
+
+    def add_drop():
+        tid = session.add_table(fresh_table(k[0]))
+        k[0] += 1
+        session.drop_table(tid)                    # keep state stable
+
+    stats = _measure(add_drop, warmup=2, iters=iters * 4)
+    stats["rebuild_p50_ms"] = rebuild_p50 * 1e3
+    stats["speedup_vs_rebuild"] = rebuild_p50 / (stats["p50_ms"] / 1e3)
+    workloads["mutate/add_table_p50"] = stats
+
+    # mutate/compact: merge a burst of 8 deltas back into the base
+    # (auto-compact off so the timed call does the whole merge)
+    from repro.store import LiveLake
+    compact_s = []
+    for it in range(max(iters // 2, 3)):
+        s2 = blend.connect(LiveLake(lake, auto_compact=False), live=True)
+        for j in range(8):
+            s2.add_table(fresh_table(100 + it * 8 + j))
+        t0 = time.perf_counter()
+        s2.compact()
+        compact_s.append(time.perf_counter() - t0)
+    workloads["mutate/compact"] = _stats(compact_s)
+
+    # snapshot/load_vs_rebuild: restart path vs indexing from scratch
+    with tempfile.TemporaryDirectory() as td:
+        path = Path(td) / "bench.snap"
+        session.snapshot(path)
+        load_s = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            blend.restore(path)
+            load_s.append(time.perf_counter() - t0)
+        stats = _stats(load_s)
+        stats["rebuild_p50_ms"] = rebuild_p50 * 1e3
+        stats["speedup_vs_rebuild"] = \
+            rebuild_p50 / float(np.percentile(load_s, 50))
+        workloads["snapshot/load_vs_rebuild"] = stats
+    return workloads
 
 
 def main(out_path: Path, full: bool = False, iters: int = 10) -> dict:
@@ -127,9 +199,25 @@ def main(out_path: Path, full: bool = False, iters: int = 10) -> dict:
 
     out_path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
     print(f"wrote {out_path}")
-    for name, s in workloads.items():
+
+    live = live_workloads(lake, iters=max(iters // 2, 5))
+    live_payload = {
+        "bench": "BENCH_3",
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "lake": lake.stats(),
+        "workloads": live,
+    }
+    live_path = out_path.parent / "BENCH_3.json"
+    live_path.write_text(
+        json.dumps(live_payload, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {live_path}")
+
+    for name, s in {**workloads, **live}.items():
+        extra = (f" ({s['speedup_vs_rebuild']:.0f}x vs rebuild)"
+                 if "speedup_vs_rebuild" in s else "")
         print(f"{name:32s} {s['ops_per_sec']:10.1f} ops/s "
-              f"p50={s['p50_ms']:.2f}ms p95={s['p95_ms']:.2f}ms")
+              f"p50={s['p50_ms']:.2f}ms p95={s['p95_ms']:.2f}ms{extra}")
     return payload
 
 

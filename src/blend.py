@@ -7,10 +7,11 @@ for the IR-to-paper mapping.
 from repro.query import (And, BlendQLError, Compiled, Counter, DEFAULT_RULES,
                          Expr, Explain, Or, QueryResult, Seek, Session, Sub,
                          connect, corr, counter, kw, lower, mc, parse,
-                         rewrite, sc)
+                         restore, rewrite, sc)
 
 __all__ = [
     "And", "BlendQLError", "Compiled", "Counter", "DEFAULT_RULES", "Expr",
     "Explain", "Or", "QueryResult", "Seek", "Session", "Sub", "connect",
-    "corr", "counter", "kw", "lower", "mc", "parse", "rewrite", "sc",
+    "corr", "counter", "kw", "lower", "mc", "parse", "restore", "rewrite",
+    "sc",
 ]

@@ -41,8 +41,16 @@ def index_specs(mesh, n_postings: int, n_numeric: int):
 
 
 def shard_device_index(index, mesh):
-    """Place a host UnifiedIndex's device arrays onto the mesh (padding the
-    posting count to the device count)."""
+    """Place a host index's device arrays onto the mesh (padding the posting
+    count to the device count).
+
+    Accepts a ``UnifiedIndex`` or a LiveLake ``SegmentStore``: each shard's
+    local segment list is derived from the store's merged live view
+    (tombstones garbage-collected), so the distributed seekers — which probe
+    shard-local contiguous hash ranges — never see delta fragmentation.
+    Mutations re-shard through the same path (re-place after each epoch)."""
+    if hasattr(index, "segments"):        # SegmentStore -> compacted view
+        index = index.merged_index()
     dev = index.device_arrays()
     n_dev = mesh.size
     out = {}

@@ -65,16 +65,24 @@ def _pow2_at_least(n: int, lo: int = 8, hi: int = 1024) -> int:
 
 
 class Executor:
+    """Runs plans over a ``UnifiedIndex`` or a LiveLake ``SegmentStore``.
+
+    A store carries an ``epoch`` counter that every mutation bumps; the
+    executor compares it lazily at query entry and rebuilds its MatchEngine
+    when stale — so a Session over a live lake always observes a consistent
+    epoch without any mutation hook into the executor.  (The value-hash
+    memo survives refreshes: it is a pure function of cell values, not of
+    the index.)"""
+
     def __init__(self, index: UnifiedIndex, m_cap_max: int = 1024,
                  row_cap: int = 8, backend: str = "sorted",
                  interpret: bool = False, bucket_width: int | None = None):
         self.index = index
-        self.engine = MatchEngine.from_index(index, backend=backend,
-                                             interpret=interpret,
-                                             bucket_width=bucket_width)
-        self.dev = self.engine.dev          # back-compat alias
-        self.n_tables = index.n_tables
-        self.max_cols = index.max_cols
+        self.backend = backend
+        self.interpret = interpret
+        self.bucket_width = bucket_width
+        self._engine_epoch = None
+        self._build_engine()
         self.m_cap_max = m_cap_max
         self.row_cap = row_cap
         rungs = {min(c, m_cap_max) for c in CAP_LADDER}
@@ -83,6 +91,35 @@ class Executor:
         self.cap_ladder = tuple(sorted(rungs))
         self._hash_cache: dict = {}
         self._hash_cache_max = 1 << 20
+        self._in_plan = False
+
+    # ---------------------------------------------------------- live engine
+    def _build_engine(self):
+        idx = self.index
+        if hasattr(idx, "segments"):       # LiveLake SegmentStore
+            if self.bucket_width is not None:
+                raise ValueError(
+                    "bucket_width is not configurable on a live store: "
+                    "each segment sizes its own lossless bucket layout")
+            self.engine = MatchEngine.from_store(idx, backend=self.backend,
+                                                 interpret=self.interpret)
+            self._engine_epoch = idx.epoch
+        else:
+            self.engine = MatchEngine.from_index(
+                idx, backend=self.backend, interpret=self.interpret,
+                bucket_width=self.bucket_width)
+        self.dev = self.engine.dev          # back-compat alias
+        self.n_tables = idx.n_tables
+        self.max_cols = idx.max_cols
+
+    def refresh(self):
+        """Pick up index mutations: rebuild the engine iff the store epoch
+        moved (no-op for a static UnifiedIndex and for unchanged epochs).
+        The value-hash memo survives: ``hash_value`` is a pure function of
+        the cell value, independent of index epoch."""
+        ep = getattr(self.index, "epoch", None)
+        if ep is not None and ep != self._engine_epoch:
+            self._build_engine()
 
     # ------------------------------------------------------------------ util
     def _hash_many(self, values) -> np.ndarray:
@@ -118,17 +155,25 @@ class Executor:
         mask[:n] = True
         return jnp.asarray(hp), jnp.asarray(mask)
 
+    def _stat_counts(self, h: np.ndarray) -> np.ndarray:
+        """Planner-statistics counts: on a live store, tombstoned postings
+        are excluded (they contribute no results, only probe-window slots),
+        so seeker ranking reflects the live lake."""
+        if hasattr(self.index, "segments"):
+            return self.index.host_counts(h, live_only=True)
+        return self.index.host_counts(h)
+
     def seeker_stats(self, spec: SeekerSpec):
         """(cardinality, n_cols, avg value frequency) — the cost features."""
         if spec.kind == "MC":
             freqs = []
             for c in range(spec.n_cols):
                 h = self._hashed([t[c] for t in spec.values])
-                freqs.append(self.index.host_counts(h).mean())
+                freqs.append(self._stat_counts(h).mean())
             avg = float(np.prod(freqs))
             return (float(len(spec.values)), float(spec.n_cols), avg)
         h = self._hashed(spec.values)
-        avg = float(self.index.host_counts(h).mean()) if len(h) else 0.0
+        avg = float(self._stat_counts(h).mean()) if len(h) else 0.0
         return (float(len(spec.values)), float(spec.n_cols), avg)
 
     def _quantize_cap(self, need: int) -> int:
@@ -144,6 +189,8 @@ class Executor:
     # --------------------------------------------------------------- seekers
     def run_seeker(self, spec: SeekerSpec, allowed=None,
                    sync: bool = True) -> comb.ResultSet:
+        if not self._in_plan:   # a running plan already pinned its epoch
+            self.refresh()
         if spec.kind in ("SC", "KW"):
             h = self._hashed(spec.values)
             m_cap = self._mcap_for(h)
@@ -232,6 +279,14 @@ class Executor:
     # ------------------------------------------------------------------ plan
     def run(self, plan: Plan, optimize: bool = True,
             cost_model: CostModel | None = None, sync: bool = True):
+        self.refresh()          # one consistent epoch for the whole plan
+        self._in_plan = True    # nested run_seeker calls must not re-refresh
+        try:
+            return self._run(plan, optimize, cost_model, sync)
+        finally:
+            self._in_plan = False
+
+    def _run(self, plan: Plan, optimize: bool, cost_model, sync: bool):
         info = ExecInfo(optimized=optimize)
         ep = optimize_plan(plan, self.seeker_stats, cost_model) if optimize \
             else None

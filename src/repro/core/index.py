@@ -38,6 +38,24 @@ def _ceil_pow2(n: int) -> int:
     return m
 
 
+def validate_row_stride(n_tables: int, row_stride: int, max_rows: int = 0):
+    """Rowkey soundness guard: ``rowkey = table * row_stride + row`` must be
+    collision-free and fit int32.  A stride smaller than the longest table
+    silently aliases rowkeys across tables and corrupts the MC validation and
+    correlation joins — reject it loudly instead."""
+    if max_rows > row_stride:
+        raise ValueError(
+            f"row_stride={row_stride} is smaller than the longest table "
+            f"({max_rows} rows): rowkeys would alias across tables and "
+            f"corrupt MC/correlation joins; widen the stride (build_index "
+            f"auto-widens; pass row_stride >= {_ceil_pow2(max_rows)})")
+    if n_tables * row_stride >= 2 ** 31:
+        raise ValueError(
+            f"int32 rowkey overflow: {n_tables} tables * row_stride="
+            f"{row_stride} exceeds 2^31; shard the lake "
+            f"(see core/distributed.py)")
+
+
 def _is_numeric_col(values) -> bool:
     seen = False
     for v in values:
@@ -71,7 +89,10 @@ class UnifiedIndex:
     bucket_bits: int
     bucket_offsets: np.ndarray   # i64 [2^bits + 1]
     table_rows: np.ndarray       # i32 [n_tables]
-    row_stride: int = 1 << 22    # rowkey = table * row_stride + row
+    # rowkey = table * row_stride + row.  No silent default: a stride smaller
+    # than the longest table aliases rowkeys across tables (validated by
+    # ``validate_row_stride`` at build time; build_index auto-widens).
+    row_stride: int
 
     @property
     def n_postings(self) -> int:
@@ -151,79 +172,123 @@ class UnifiedIndex:
         return out
 
 
-def build_index(lake: DataLake, bucket_bits: int = 12, seed: int = 0,
-                with_quadrants: bool = True) -> UnifiedIndex:
-    rng = np.random.default_rng(seed)
-    hashes, tids, cids, rids = [], [], [], []
-    sk_lo, sk_hi, quads = [], [], []
-    r_conv, r_rand = [], []
-    max_cols = 1
-    table_rows = np.zeros(lake.n_tables, np.int32)
+POSTING_KEYS = ("cell_hash", "table_id", "col_id", "row_id", "superkey_lo",
+                "superkey_hi", "quadrant", "rank_conv", "rank_rand")
 
-    for t, table in enumerate(lake.tables):
-        nr, nc = table.n_rows, table.n_cols
-        max_cols = max(max_cols, nc)
-        table_rows[t] = nr
-        col_hashes = []
-        col_quads = []
-        for c, col in enumerate(table.columns):
-            h = hashing.hash_array(col)
-            col_hashes.append(h)
-            if with_quadrants and _is_numeric_col(col):
-                vals = np.array([float(v) for v in col])
-                q = (vals >= vals.mean()).astype(np.int8)
-            else:
-                q = np.full(nr, -1, np.int8)
-            col_quads.append(q)
-        # row superkeys: OR of position-independent cell bits (MATE-style
-        # bloom; alignment is verified exactly at query time)
+
+def table_postings(table, tid: int, *, seed: int = 0,
+                   with_quadrants: bool = True) -> dict:
+    """Unsorted posting arrays for one table (dict over ``POSTING_KEYS``).
+
+    Shared by ``build_index`` and the LiveLake segment builder
+    (store/segments.py), so an incrementally-built segment holds exactly the
+    arrays a from-scratch rebuild would produce.  ``rank_rand`` is therefore
+    seeded per (table name, column) — not from one build-wide RNG stream —
+    so the shuffle a column gets is independent of build order.
+    """
+    nr, nc = table.n_rows, table.n_cols
+    col_hashes, col_quads, col_rand = [], [], []
+    for c, col in enumerate(table.columns):
+        col_hashes.append(hashing.hash_array(col))
+        if with_quadrants and _is_numeric_col(col):
+            vals = np.array([float(v) for v in col])
+            col_quads.append((vals >= vals.mean()).astype(np.int8))
+        else:
+            col_quads.append(np.full(nr, -1, np.int8))
+        rng = np.random.default_rng(
+            [seed, hashing.fnv1a_bytes(str(table.name).encode()), c])
+        col_rand.append(rng.permutation(nr).astype(np.int32))
+    # row superkeys: OR of position-independent cell bits (MATE-style
+    # bloom; alignment is verified exactly at query time)
+    if nc:
         all_h = np.concatenate(col_hashes)
         all_r = np.tile(np.arange(nr), nc)
         sk = hashing.superkeys_for_rows(all_h, np.zeros_like(all_h), all_r, nr)
-        lo32, hi32 = hashing.split_u64(sk)
-        for c in range(nc):
-            hashes.append(col_hashes[c])
-            tids.append(np.full(nr, t, np.int32))
-            cids.append(np.full(nr, c, np.int32))
-            rids.append(np.arange(nr, dtype=np.int32))
-            sk_lo.append(lo32)
-            sk_hi.append(hi32)
-            quads.append(col_quads[c])
-            r_conv.append(np.arange(nr, dtype=np.int32))
-            r_rand.append(rng.permutation(nr).astype(np.int32))
+    else:
+        sk = np.zeros(0, np.uint64)
+    lo32, hi32 = hashing.split_u64(sk)
+    n = nr * nc
+    return {
+        "cell_hash": np.concatenate(col_hashes) if nc
+        else np.zeros(0, np.uint32),
+        "table_id": np.full(n, tid, np.int32),
+        "col_id": np.repeat(np.arange(nc, dtype=np.int32), nr),
+        "row_id": np.tile(np.arange(nr, dtype=np.int32), nc),
+        "superkey_lo": np.tile(lo32, nc),
+        "superkey_hi": np.tile(hi32, nc),
+        "quadrant": np.concatenate(col_quads) if nc else np.zeros(0, np.int8),
+        "rank_conv": np.tile(np.arange(nr, dtype=np.int32), nc),
+        "rank_rand": np.concatenate(col_rand) if nc else np.zeros(0, np.int32),
+    }
 
-    cell_hash = np.concatenate(hashes)
-    table_id = np.concatenate(tids)
-    col_id = np.concatenate(cids)
-    row_id = np.concatenate(rids)
-    superkey_lo = np.concatenate(sk_lo)
-    superkey_hi = np.concatenate(sk_hi)
-    quadrant = np.concatenate(quads)
-    rank_conv = np.concatenate(r_conv)
-    rank_rand = np.concatenate(r_rand)
 
-    order = np.lexsort((row_id, col_id, table_id, cell_hash))
-    cell_hash, table_id, col_id, row_id = (cell_hash[order], table_id[order],
-                                           col_id[order], row_id[order])
-    superkey_lo, superkey_hi = superkey_lo[order], superkey_hi[order]
-    quadrant = quadrant[order]
-    rank_conv, rank_rand = rank_conv[order], rank_rand[order]
+_POSTING_DTYPES = {"cell_hash": np.uint32, "quadrant": np.int8,
+                   "superkey_lo": np.uint32, "superkey_hi": np.uint32}
 
+
+def concat_postings(per_table: list) -> dict:
+    """Concatenate per-table posting dicts (empty-safe)."""
+    return {k: np.concatenate([p[k] for p in per_table]) if per_table
+            else np.zeros(0, _POSTING_DTYPES.get(k, np.int32))
+            for k in POSTING_KEYS}
+
+
+def sort_postings(parts: dict) -> dict:
+    """Lexsort concatenated posting arrays by (cell_hash, table, col, row)."""
+    order = np.lexsort((parts["row_id"], parts["col_id"], parts["table_id"],
+                        parts["cell_hash"]))
+    return {k: v[order] for k, v in parts.items()}
+
+
+def bucket_offsets_for(cell_hash: np.ndarray, bucket_bits: int) -> np.ndarray:
+    """Offsets of the radix buckets over the top ``bucket_bits`` hash bits."""
     nb = 1 << bucket_bits
     shift = 32 - bucket_bits
-    bucket_offsets = np.searchsorted(
-        (cell_hash >> shift).astype(np.uint32), np.arange(nb + 1, dtype=np.uint32),
-        side="left").astype(np.int64)
+    return np.searchsorted(
+        (cell_hash >> shift).astype(np.uint32),
+        np.arange(nb + 1, dtype=np.uint32), side="left").astype(np.int64)
 
-    numeric = np.nonzero(quadrant >= 0)[0]
-    row_stride = _ceil_pow2(int(table_rows.max(initial=1)))
-    rowkey = table_id[numeric].astype(np.int64) * row_stride + \
-        row_id[numeric].astype(np.int64)
-    assert lake.n_tables * row_stride < 2 ** 31, \
-        "int32 rowkey overflow: shard the lake (see core/distributed.py)"
+
+def numeric_view(parts: dict, row_stride: int):
+    """(num_perm, num_rowkey) — numeric postings permuted to (table, row)
+    order.  The permutation itself is stride-independent (any collision-free
+    stride induces the same (table, row) order), so widening the stride only
+    recomputes ``num_rowkey`` values."""
+    numeric = np.nonzero(parts["quadrant"] >= 0)[0]
+    rowkey = parts["table_id"][numeric].astype(np.int64) * row_stride + \
+        parts["row_id"][numeric].astype(np.int64)
     np_order = np.argsort(rowkey, kind="stable")
-    num_perm = numeric[np_order].astype(np.int32)
-    num_rowkey = rowkey[np_order].astype(np.int32)
+    return numeric[np_order].astype(np.int32), \
+        rowkey[np_order].astype(np.int32)
+
+
+def build_index(lake: DataLake, bucket_bits: int = 12, seed: int = 0,
+                with_quadrants: bool = True,
+                row_stride: int | None = None) -> UnifiedIndex:
+    max_cols = 1
+    table_rows = np.zeros(max(lake.n_tables, 1), np.int32)
+    per_table = []
+    for t, table in enumerate(lake.tables):
+        max_cols = max(max_cols, table.n_cols)
+        table_rows[t] = table.n_rows
+        per_table.append(table_postings(table, t, seed=seed,
+                                        with_quadrants=with_quadrants))
+    parts = concat_postings(per_table)
+    parts = sort_postings(parts)
+
+    max_rows = int(table_rows.max(initial=1))
+    row_stride = max(_ceil_pow2(max_rows), row_stride or 0)
+    validate_row_stride(lake.n_tables, row_stride, max_rows)
+
+    bucket_offsets = bucket_offsets_for(parts["cell_hash"], bucket_bits)
+    num_perm, num_rowkey = numeric_view(parts, row_stride)
+
+    cell_hash, table_id, col_id, row_id = (
+        parts["cell_hash"], parts["table_id"], parts["col_id"],
+        parts["row_id"])
+    superkey_lo, superkey_hi = parts["superkey_lo"], parts["superkey_hi"]
+    quadrant = parts["quadrant"]
+    rank_conv, rank_rand = parts["rank_conv"], parts["rank_rand"]
 
     return UnifiedIndex(
         cell_hash=cell_hash, table_id=table_id, col_id=col_id, row_id=row_id,

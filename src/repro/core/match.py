@@ -1,16 +1,26 @@
 """MatchEngine: the unified probe layer every seeker routes through.
 
 One object owns the device-resident index arrays, the padded radix-bucket
-layout, and the low-level match primitives:
+layouts, and the low-level match primitives.  Since the LiveLake subsystem
+(repro/store) the engine is *segment-aware*: the resident index is an ordered
+list of immutable sorted segments (one large base + small L0 deltas) and
 
-* ``probe(q_hash, q_mask, m_cap)`` -> (pidx, valid, overflow) — postings per
-  query value, expanded to a static [nq, m_cap] window.  Two interchangeable
-  backends: ``"sorted"`` (binary search over the globally hash-sorted
-  postings) and ``"bucket"`` (the Pallas ``bucket_probe`` kernel over the
-  padded radix-bucket table).  Seeker outputs are bit-identical across
-  backends (parity-tested in tests/test_match_engine.py).
+* ``probe(q_hash, q_mask, m_cap)`` fans out over the segments — each segment
+  has its own sorted run, padded-bucket layout and capacity-ladder entry —
+  and concatenates the per-segment posting windows along the match axis, so
+  seekers see one ``[nq, n_segments * m_cap]`` window and stay unchanged.
+* tombstone masks (dropped tables) are applied to ``valid`` inside ``probe``
+  / ``rowjoin``, *before* any group-by stage, so mutation parity with a
+  from-scratch rebuild holds bit-exactly.
+
+Two interchangeable probe backends: ``"sorted"`` (binary search over each
+segment's hash-sorted run) and ``"bucket"`` (the Pallas ``bucket_probe``
+kernel over each segment's padded radix-bucket table).  Seeker outputs are
+bit-identical across backends (parity-tested in tests/test_match_engine.py)
+and across mutation histories (tests/test_livelake.py).
+
 * ``rowjoin(rowkeys, mask, row_cap)`` — the numeric-postings-by-row probe of
-  the correlation seeker (same expansion over ``num_rowkey``).
+  the correlation seeker (same fan-out over per-segment ``num_rowkey`` runs).
 * ``bloom(...)`` — the MC seeker's XASH superkey containment stage, routed
   through the ``superkey_filter`` kernel package.
 * ``qcr(n_agree, n_all)`` — the correlation seeker's scoring epilogue,
@@ -19,9 +29,11 @@ layout, and the low-level match primitives:
   validation join).
 
 The engine is a registered pytree: its arrays are leaves (so jitted seekers
-close over nothing) and its configuration is static aux data (so switching
-backend retraces, while re-querying with new values of the same padded shape
-hits the jit cache — the retrace-free serving contract).
+close over nothing) and its configuration — including the static per-segment
+bounds — is hashable aux data.  Segments are length-padded onto a power-of-
+two ladder (store/segments.py), so a mutation that lands in an already-seen
+segment topology re-uses the compiled seekers (zero new traces — the
+retrace-free serving contract extends to live lakes).
 
 ``probe_sorted`` is also exposed as a free function: the distributed
 shard_map seekers (core/distributed.py) reuse the same primitive on their
@@ -56,6 +68,22 @@ def probe_sorted(sorted_keys, queries, q_mask, cap):
     return pidx, valid, overflow
 
 
+def probe_sorted_bounded(sorted_keys, n_real: int, queries, q_mask, cap):
+    """``probe_sorted`` over a length-padded sorted run: only the first
+    ``n_real`` keys are live postings; the tail is sort-stable sentinel
+    padding that must never match (clamping lo/hi to ``n_real`` keeps even
+    queries that equal the sentinel from touching it)."""
+    lo = jnp.minimum(jnp.searchsorted(sorted_keys, queries, side="left"),
+                     n_real)
+    hi = jnp.minimum(jnp.searchsorted(sorted_keys, queries, side="right"),
+                     n_real)
+    pidx = lo[:, None] + jnp.arange(cap)[None, :]
+    valid = (pidx < hi[:, None]) & q_mask[:, None]
+    pidx = jnp.clip(pidx, 0, sorted_keys.shape[0] - 1)
+    overflow = jnp.sum(jnp.where(q_mask, jnp.maximum(hi - lo - cap, 0), 0))
+    return pidx, valid, overflow
+
+
 def sorted_member(sorted_keys, queries):
     """Batched membership: sorted_keys [B, M] row-sorted, queries [B, C] ->
     bool [B, C] (the MC validation join primitive)."""
@@ -66,24 +94,33 @@ def sorted_member(sorted_keys, queries):
 
 @dataclass(frozen=True)
 class EngineConfig:
-    """Static (hashable) part of a MatchEngine — the jit cache key."""
+    """Static (hashable) part of a MatchEngine — the jit cache key.
+
+    ``seg_bounds`` / ``num_bounds`` are per-segment ``(start, length,
+    n_real)`` triples into the concatenated device arrays: ``start`` is the
+    segment's offset, ``length`` its padded extent (the slice shape the trace
+    specializes on), ``n_real`` the live-posting count within it."""
     backend: str
     interpret: bool
     bucket_bits: int
-    bucket_width: int
+    bucket_widths: tuple          # per segment; () on the sorted backend
+    seg_bounds: tuple             # ((start, length, n_real), ...)
+    num_bounds: tuple             # ((start, length, n_real), ...)
     n_tables: int
     max_cols: int
     row_stride: int
 
 
 class MatchEngine:
-    """See module docstring.  Build with ``MatchEngine.from_index``."""
+    """See module docstring.  Build with ``MatchEngine.from_index`` (one
+    static segment) or ``MatchEngine.from_store`` (LiveLake segments)."""
 
     def __init__(self, dev: dict, bucket_hashes, bucket_payload,
-                 config: EngineConfig):
-        self.dev = dev
-        self.bucket_hashes = bucket_hashes
+                 config: EngineConfig, alive=None):
+        self.dev = dev                      # concatenated per-segment arrays
+        self.bucket_hashes = bucket_hashes  # tuple of [2^bits, W_i] per seg
         self.bucket_payload = bucket_payload
+        self.alive = alive                  # bool [n_tables] tombstone mask
         self.config = config
 
     # ------------------------------------------------------------- building
@@ -95,7 +132,7 @@ class MatchEngine:
                              f"got {backend!r}")
         dev = index.device_arrays()
         bh = bp = None
-        width = 0
+        widths = ()
         if backend == "bucket":
             # the layout must be lossless: a truncated bucket would drop
             # matches without any overflow accounting (the probe can only
@@ -111,25 +148,76 @@ class MatchEngine:
             width = ((bucket_width + 127) // 128) * 128   # TPU lane padding
             bh_np, bp_np, layout_overflow = index.padded_buckets(width)
             assert layout_overflow == 0
-            bh, bp = jnp.asarray(bh_np), jnp.asarray(bp_np)
+            bh, bp = (jnp.asarray(bh_np),), (jnp.asarray(bp_np),)
+            widths = (width,)
+        n = index.n_postings
+        m = len(index.num_rowkey)
         cfg = EngineConfig(backend=backend, interpret=interpret,
-                           bucket_bits=index.bucket_bits, bucket_width=width,
+                           bucket_bits=index.bucket_bits,
+                           bucket_widths=widths,
+                           seg_bounds=((0, n, n),),
+                           num_bounds=((0, m, m),),
                            n_tables=index.n_tables, max_cols=index.max_cols,
                            row_stride=index.row_stride)
         return cls(dev, bh, bp, cfg)
+
+    @classmethod
+    def from_store(cls, store, *, backend: str = "sorted",
+                   interpret: bool = False):
+        """Engine over a LiveLake SegmentStore: per-segment device arrays are
+        concatenated *on device* (host->device transfer is only ever the new
+        segment — segment uploads are memoized on the immutable segments),
+        and the per-segment bounds become static aux data."""
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, "
+                             f"got {backend!r}")
+        segs = store.segments
+        seg_devs = [s.device_arrays() for s in segs]
+        dev = {k: jnp.concatenate([d[k] for d in seg_devs])
+               for k in seg_devs[0]}
+        seg_bounds, num_bounds = [], []
+        off = noff = 0
+        for s in segs:
+            seg_bounds.append((off, s.n_padded, s.n_real))
+            num_bounds.append((noff, s.n_num_padded, s.n_num))
+            off += s.n_padded
+            noff += s.n_num_padded
+        bh = bp = None
+        widths = ()
+        if backend == "bucket":
+            bhs, bps, ws = [], [], []
+            for (start, _, _), s in zip(seg_bounds, segs):
+                width = ((max(s.max_bucket_count(), 1) + 127) // 128) * 128
+                bh_i, bp_i = s.device_buckets(width, payload_offset=start)
+                bhs.append(bh_i)
+                bps.append(bp_i)
+                ws.append(width)
+            bh, bp, widths = tuple(bhs), tuple(bps), tuple(ws)
+        cfg = EngineConfig(backend=backend, interpret=interpret,
+                           bucket_bits=store.bucket_bits,
+                           bucket_widths=widths,
+                           seg_bounds=tuple(seg_bounds),
+                           num_bounds=tuple(num_bounds),
+                           n_tables=store.n_tables, max_cols=store.max_cols,
+                           row_stride=store.row_stride)
+        return cls(dev, bh, bp, cfg, alive=jnp.asarray(store.alive))
 
     @property
     def backend(self) -> str:
         return self.config.backend
 
     # ------------------------------------------------------------ primitives
-    def probe(self, q_hash, q_mask, m_cap: int):
-        """Postings window per query hash: (pidx, valid, overflow)."""
+    def _probe_segment(self, i: int, q_hash, q_mask, m_cap: int):
+        """One segment's (pidx, valid, overflow) window, globally indexed."""
+        start, length, n_real = self.config.seg_bounds[i]
         if self.config.backend == "sorted":
-            return probe_sorted(self.dev["hash"], q_hash, q_mask, m_cap)
+            keys = self.dev["hash"][start:start + length]
+            pidx, valid, ovf = probe_sorted_bounded(keys, n_real, q_hash,
+                                                    q_mask, m_cap)
+            return pidx + start, valid, ovf
         nq = q_hash.shape[0]
         q_block = min(256, nq)
-        hits = bucket_ops.probe(self.bucket_hashes, self.bucket_payload,
+        hits = bucket_ops.probe(self.bucket_hashes[i], self.bucket_payload[i],
                                 q_hash, self.config.bucket_bits,
                                 use_kernel=True,
                                 interpret=self.config.interpret,
@@ -137,9 +225,10 @@ class MatchEngine:
         hit = hits >= 0
         count = jnp.sum(hit, axis=1)
         n = self.dev["hash"].shape[0]
-        # postings are bucket-contiguous and hash-sorted, so the matched
-        # payloads form the run [base, base + count): recover the window from
-        # the min payload instead of compacting the hit matrix
+        # postings are bucket-contiguous and hash-sorted within the segment,
+        # so the matched (globally-offset) payloads form the run
+        # [base, base + count): recover the window from the min payload
+        # instead of compacting the hit matrix
         base = jnp.min(jnp.where(hit, hits, n), axis=1)
         pidx = base[:, None] + jnp.arange(m_cap)[None, :]
         valid = (jnp.arange(m_cap)[None, :] < count[:, None]) & q_mask[:, None]
@@ -147,10 +236,45 @@ class MatchEngine:
         overflow = jnp.sum(jnp.where(q_mask, jnp.maximum(count - m_cap, 0), 0))
         return pidx, valid, overflow
 
+    def probe(self, q_hash, q_mask, m_cap: int):
+        """Postings window per query hash: (pidx, valid, overflow), fanned
+        out over the segments ([nq, n_segments * m_cap]) with tombstoned
+        tables masked out of ``valid`` before any group-by stage.
+
+        One uniform ``m_cap`` (sized from cross-segment total counts) is
+        deliberate: per-segment caps would shrink the window when matches
+        spread across segments, but each data-dependent cap combination
+        would be its own jit-cache entry — fragmenting the capacity-ladder
+        buckets that make mutation serving retrace-free.  Compaction, not
+        cap tuning, is the mechanism that bounds the fan-out cost."""
+        parts = [self._probe_segment(i, q_hash, q_mask, m_cap)
+                 for i in range(len(self.config.seg_bounds))]
+        if len(parts) == 1:
+            pidx, valid, ovf = parts[0]
+        else:
+            pidx = jnp.concatenate([p for p, _, _ in parts], axis=1)
+            valid = jnp.concatenate([v for _, v, _ in parts], axis=1)
+            ovf = sum(o for _, _, o in parts)
+        if self.alive is not None:
+            valid &= self.alive[self.dev["table"][pidx]]
+        return pidx, valid, ovf
+
     def rowjoin(self, rowkeys, mask, row_cap: int):
-        """Numeric-postings window per candidate rowkey: (nidx, nvalid)."""
-        nidx, nvalid, _ = probe_sorted(self.dev["num_rowkey"], rowkeys, mask,
-                                       row_cap)
+        """Numeric-postings window per candidate rowkey: (nidx, nvalid),
+        fanned out over the per-segment (table, row)-sorted runs."""
+        parts = []
+        for start, length, n_real in self.config.num_bounds:
+            keys = self.dev["num_rowkey"][start:start + length]
+            nidx, nvalid, _ = probe_sorted_bounded(keys, n_real, rowkeys,
+                                                   mask, row_cap)
+            parts.append((nidx + start, nvalid))
+        if len(parts) == 1:
+            nidx, nvalid = parts[0]
+        else:
+            nidx = jnp.concatenate([p for p, _ in parts], axis=1)
+            nvalid = jnp.concatenate([v for _, v in parts], axis=1)
+        if self.alive is not None:
+            nvalid &= self.alive[self.dev["num_table"][nidx]]
         return nidx, nvalid
 
     def bloom(self, pidx, qk_lo, qk_hi):
@@ -177,12 +301,12 @@ class MatchEngine:
 
 
 def _engine_flatten(e: MatchEngine):
-    return ((e.dev, e.bucket_hashes, e.bucket_payload), e.config)
+    return ((e.dev, e.bucket_hashes, e.bucket_payload, e.alive), e.config)
 
 
 def _engine_unflatten(aux, children):
-    dev, bh, bp = children
-    return MatchEngine(dev, bh, bp, aux)
+    dev, bh, bp, alive = children
+    return MatchEngine(dev, bh, bp, aux, alive=alive)
 
 
 jax.tree_util.register_pytree_node(MatchEngine, _engine_flatten,

@@ -13,6 +13,13 @@ Four steps on the plan DAG:
    Difference: subtrahend restricted to the minuend's tables; Counter/Union:
    no rewriting), mirroring the paper's predicate injection.
 
+Statistics are segment-aware on live lakes: ``stats_fn`` (the executor's
+``seeker_stats``) sums per-segment ``host_counts`` with tombstoned postings
+excluded (``live_only=True``), so the ranking reflects the live lake even
+while dropped tables still occupy probe-window slots awaiting compaction.
+Match *capacities*, by contrast, are sized from the tombstone-inclusive
+counts — a masked posting fills a window slot all the same.
+
 Theorem 1 (output preservation) is tested property-style in
 tests/test_optimizer.py.
 """

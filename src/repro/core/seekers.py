@@ -34,10 +34,19 @@ def _mark_trace(kind: str):
     TRACE_COUNTS[kind] += 1
 
 
-def _first_occurrence(*keys):
-    """Mask of first occurrence of a key combo along axis 1 (inputs sorted)."""
+def _first_occurrence(*keys, valid=None):
+    """Mask of first occurrence of a key combo along axis 1.
+
+    Inputs are sorted within each valid run.  With a segment-fanned probe
+    window ([nq, n_segments * m_cap]) a valid run can directly follow another
+    segment's garbage tail whose clipped gather happens to repeat the same
+    key — passing ``valid`` masks keys to a sentinel first so run boundaries
+    always register as a change (a table's postings live in exactly one
+    segment, so a key never spans two valid runs)."""
     first = None
     for k in keys:
+        if valid is not None:
+            k = jnp.where(valid, k, -1)
         prev = jnp.concatenate([jnp.full_like(k[:, :1], -1), k[:, :-1]], axis=1)
         f = k != prev
         first = f if first is None else (first | f)
@@ -58,7 +67,7 @@ def sc_seeker(engine, q_hash, q_mask, *, m_cap, n_tables, max_cols,
     pidx, valid, ovf = engine.probe(q_hash, q_mask, m_cap)
     t = idx["table"][pidx]
     c = idx["col"][pidx]
-    contrib = valid & _first_occurrence(t, c)
+    contrib = valid & _first_occurrence(t, c, valid=valid)
     if allowed is not None:
         contrib &= allowed[t]
     flat = (t * max_cols + c).reshape(-1)
@@ -77,7 +86,7 @@ def kw_seeker(engine, q_hash, q_mask, *, m_cap, n_tables, allowed=None):
     idx = engine.dev
     pidx, valid, ovf = engine.probe(q_hash, q_mask, m_cap)
     t = idx["table"][pidx]
-    contrib = valid & _first_occurrence(t)
+    contrib = valid & _first_occurrence(t, valid=valid)
     if allowed is not None:
         contrib &= allowed[t]
     scores = jnp.zeros(n_tables, jnp.float32).at[t.reshape(-1)].add(

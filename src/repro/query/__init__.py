@@ -43,10 +43,11 @@ from repro.query.lower import lower
 from repro.query.parse import BlendQLError, parse
 from repro.query.rules import DEFAULT_RULES, rewrite
 from repro.query.session import (Compiled, Explain, QueryResult, Session,
-                                 connect)
+                                 connect, restore)
 
 __all__ = [
     "And", "BlendQLError", "Compiled", "Counter", "DEFAULT_RULES", "Expr",
     "Explain", "Or", "QueryResult", "Seek", "Session", "Sub", "connect",
-    "corr", "counter", "kw", "lower", "mc", "parse", "rewrite", "sc",
+    "corr", "counter", "kw", "lower", "mc", "parse", "restore", "rewrite",
+    "sc",
 ]

@@ -77,12 +77,22 @@ class Explain:
     node_seconds: dict
     overflow: int
     ids: list
+    index_shape: dict = field(default_factory=dict)   # live-lake observability
 
     def __str__(self):
         lines = ["== logical plan =="]
         lines += [self.logical_tree]
         lines.append("== rewrite rules applied ==")
         lines += [f"  - {r}" for r in self.applied_rules] or ["  (none)"]
+        if self.index_shape:
+            s = self.index_shape
+            lines.append("== index ==")
+            lines.append(f"  mode: {s['mode']}   epoch: {s['epoch']}   "
+                         f"segments: {s['segments']}")
+            lines.append(f"  postings/segment: {s['postings_per_segment']}")
+            lines.append(f"  live tables: {s['live_tables']}"
+                         + (f"   tombstoned: {s['tombstoned']}"
+                            if s["tombstoned"] else ""))
         lines.append("== physical order (ranked execution groups) ==")
         if self.physical_order:
             for comb, seekers in self.physical_order.items():
@@ -103,17 +113,58 @@ class Explain:
 
 class Session:
     """A connection to one lake: resident index, compiled-seeker cache,
-    cost model, and the BlendQL compile pipeline."""
+    cost model, and the BlendQL compile pipeline.  Over a live lake
+    (``connect(lake, live=True)``) the Session additionally exposes the
+    mutation API — ``add_table`` / ``drop_table`` / ``compact`` /
+    ``snapshot`` — and ``explain`` reports the index shape (segments,
+    postings, tombstones, epoch)."""
 
     def __init__(self, executor: Executor, lake=None,
-                 cost_model: CostModel | None = None):
+                 cost_model: CostModel | None = None, live=None):
         self.executor = executor
         self.lake = lake
         self.cost_model = cost_model
+        self.live = live                  # LiveLake handle or None
 
     @property
     def index(self):
         return self.executor.index
+
+    # ------------------------------------------------------------ mutations
+    def _require_live(self):
+        if self.live is None:
+            raise RuntimeError("this session is static; open one with "
+                               "blend.connect(lake, live=True) to mutate")
+        return self.live
+
+    def add_table(self, table, name: str | None = None) -> int:
+        """Index one new table without a rebuild; returns its table id."""
+        return self._require_live().add_table(table, name=name)
+
+    def drop_table(self, ref) -> int:
+        """Drop a table (id or name): tombstoned, or whole-run removed."""
+        return self._require_live().drop_table(ref)
+
+    def compact(self, full: bool = True, reclaim_ids: bool = False):
+        """Merge delta segments off the hot path (store/compact.py)."""
+        return self._require_live().compact(full=full,
+                                            reclaim_ids=reclaim_ids)
+
+    def snapshot(self, path):
+        """Persist the compacted index; reload with ``blend.restore``."""
+        return self._require_live().snapshot(path)
+
+    def index_shape(self) -> dict:
+        """Observable index layout (also rendered by ``explain``)."""
+        idx = self.executor.index
+        if hasattr(idx, "shape"):
+            return idx.shape()
+        return {"mode": "static", "epoch": 0, "segments": 1,
+                "postings_per_segment": [idx.n_postings],
+                "tables_per_segment": [idx.n_tables],
+                "live_tables": idx.n_tables, "tombstoned": [],
+                "table_slots": idx.n_tables, "row_stride": idx.row_stride,
+                "postings": idx.n_postings}
 
     # ---------------------------------------------------------------- compile
     def compile(self, q, top: int | None = None) -> Compiled:
@@ -181,13 +232,36 @@ class Session:
                        applied_rules=list(compiled.applied_rules),
                        physical_order=ranked, exec_order=list(info.order),
                        node_seconds=dict(info.node_seconds),
-                       overflow=info.overflow if execute else 0, ids=ids)
+                       overflow=info.overflow if execute else 0, ids=ids,
+                       index_shape=self.index_shape())
 
 
-def connect(lake, cost_model: CostModel | None = None,
+def connect(lake, cost_model: CostModel | None = None, live: bool = False,
             **executor_opts) -> Session:
     """Open a discovery session on a lake: builds the unified index and the
     executor (kwargs forwarded: ``backend=``, ``interpret=``, ``m_cap_max=``,
-    ...), returning the Session handle that serves queries."""
+    ...), returning the Session handle that serves queries.
+
+    With ``live=True`` the index is built as a LiveLake segment store
+    (repro/store): the session gains ``add_table`` / ``drop_table`` /
+    ``compact`` / ``snapshot`` and queries keep serving — bit-identically to
+    a from-scratch rebuild — while the lake evolves.  ``lake`` may also be
+    an existing ``LiveLake`` handle."""
+    if live:
+        from repro.store.live import LiveLake
+        ll = lake if isinstance(lake, LiveLake) else LiveLake(lake)
+        executor = Executor(ll.store, **executor_opts)
+        return Session(executor, lake=None if lake is ll else lake,
+                       cost_model=cost_model, live=ll)
     executor = Executor(build_index(lake), **executor_opts)
     return Session(executor, lake=lake, cost_model=cost_model)
+
+
+def restore(path, cost_model: CostModel | None = None,
+            **executor_opts) -> Session:
+    """Open a live session from a snapshot (store/snapshot.py) — no
+    re-indexing: the server restart path."""
+    from repro.store.live import LiveLake
+    ll = LiveLake.restore(path)
+    executor = Executor(ll.store, **executor_opts)
+    return Session(executor, cost_model=cost_model, live=ll)

@@ -53,21 +53,46 @@ class DiscoveryResponse:
 
 class DiscoveryEngine:
     """Serves discovery requests (BlendQL expressions, SQL strings, or
-    legacy ``Plan`` objects) over a resident lake via one ``Session``."""
+    legacy ``Plan`` objects) over a resident lake via one ``Session``.
+
+    With ``live=True`` (or a live session) the engine serves an evolving
+    lake: ``add_table`` / ``drop_table`` / ``compact`` / ``snapshot``
+    forward to the Session's LiveLake, and in-flight ``serve`` calls always
+    observe one consistent index epoch (the executor refreshes between
+    requests, never inside one)."""
 
     def __init__(self, lake, cost_model=None, backend: str = "sorted",
-                 interpret: bool = False, session=None):
+                 interpret: bool = False, session=None, live: bool = False):
         if session is not None:
-            if backend != "sorted" or interpret:
-                raise ValueError("backend/interpret are fixed by the given "
-                                 "session; pass them to connect() instead")
+            if backend != "sorted" or interpret or live:
+                raise ValueError("backend/interpret/live are fixed by the "
+                                 "given session; pass them to connect() "
+                                 "instead")
             if cost_model is not None:
                 session.cost_model = cost_model
             self.session = session
         else:
             self.session = connect(lake, cost_model=cost_model,
-                                   backend=backend, interpret=interpret)
+                                   backend=backend, interpret=interpret,
+                                   live=live)
         self.lake = lake
+
+    # -------------------------------------------------- live-lake mutations
+    @property
+    def live(self):
+        return self.session.live
+
+    def add_table(self, table, name=None) -> int:
+        return self.session.add_table(table, name=name)
+
+    def drop_table(self, ref) -> int:
+        return self.session.drop_table(ref)
+
+    def compact(self, **kw):
+        return self.session.compact(**kw)
+
+    def snapshot(self, path):
+        return self.session.snapshot(path)
 
     # Session owns the index/executor/cost model; keep the old attribute
     # surface as thin forwarders.

@@ -1,0 +1,26 @@
+"""LiveLake: incremental index maintenance for evolving lakes.
+
+The resident unified index becomes an ordered list of immutable sorted
+segments — one large base plus small L0 deltas — in the LSM style:
+
+* :mod:`repro.store.segments` — ``Segment`` (an immutable sorted posting
+  run with its own bucket layout and padded capacity-ladder entry) and
+  ``SegmentStore`` (the mutable, engine-facing collection: ``add_table`` /
+  ``drop_table`` produce deltas and tombstones, never array rewrites).
+* :mod:`repro.store.compact` — size-tiered compaction merging deltas into
+  larger segments off the hot path.
+* :mod:`repro.store.live` — the ``LiveLake`` facade wired into
+  ``blend.connect(lake, live=True)``.
+* :mod:`repro.store.snapshot` — versioned ``.npz`` + JSON-manifest
+  persistence so a server restart skips indexing entirely.
+
+Every mutation bumps the store epoch; executors rebuild their MatchEngine
+lazily on the next query, and seeker outputs stay bit-identical to a
+from-scratch rebuild of the mutated lake (tests/test_livelake.py).
+"""
+from repro.store.compact import CompactionPolicy, compact_store, maybe_compact
+from repro.store.live import LiveLake
+from repro.store.segments import Segment, SegmentStore, build_segment
+
+__all__ = ["CompactionPolicy", "LiveLake", "Segment", "SegmentStore",
+           "build_segment", "compact_store", "maybe_compact"]

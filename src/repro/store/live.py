@@ -1,0 +1,93 @@
+"""LiveLake: the mutable-lake facade over the segment store.
+
+``blend.connect(lake, live=True)`` builds one of these and wires it into the
+Session, so discovery queries keep flowing while the lake evolves::
+
+    session = blend.connect(lake, live=True)
+    tid = session.add_table(table)        # L0 delta, no rebuild
+    session.query(blend.sc(values))       # observes the new table
+    session.drop_table(tid)               # tombstone (or whole-run delete)
+    session.compact()                     # merge deltas off the hot path
+    session.snapshot("lake.snap")         # .npz + manifest for fast restart
+
+Every mutation bumps the store epoch; executors notice on their next query
+and refresh their MatchEngine (device-side concat of the memoized segment
+uploads — the host only ever transfers the new delta).  Queries therefore
+always observe a consistent epoch: a mutation never changes the index under
+a dispatched plan.
+
+``auto_compact`` runs the size-tiered policy (store/compact.py) after each
+``add_table`` once the segment count crosses the policy threshold.
+"""
+from __future__ import annotations
+
+from repro.store.compact import CompactionPolicy, compact_store, maybe_compact
+from repro.store.segments import SegmentStore
+from repro.store import snapshot as snap
+
+
+class LiveLake:
+    """Mutable lake handle: tables in, tables out, index stays resident."""
+
+    def __init__(self, lake=None, *, bucket_bits: int = 12, seed: int = 0,
+                 policy: CompactionPolicy | None = None,
+                 auto_compact: bool = True, store: SegmentStore | None = None):
+        self.store = store if store is not None else SegmentStore(
+            lake, bucket_bits=bucket_bits, seed=seed)
+        self.policy = policy or CompactionPolicy()
+        self.auto_compact = auto_compact
+        #: tid -> Table registry for live tables (examples / parity tests;
+        #: empty after ``restore`` — snapshots persist arrays, not cells)
+        self.tables = {t: tab for t, tab in
+                       enumerate(lake.tables)} if lake is not None else {}
+
+    # ------------------------------------------------------------- mutations
+    @property
+    def epoch(self) -> int:
+        return self.store.epoch
+
+    def add_table(self, table, name: str | None = None) -> int:
+        tid = self.store.add_table(table, name=name)
+        self.tables[tid] = table
+        if self.auto_compact:
+            maybe_compact(self.store, self.policy)
+        return tid
+
+    def drop_table(self, ref) -> int:
+        tid = self.store.drop_table(ref)
+        self.tables.pop(tid, None)
+        return tid
+
+    def compact(self, full: bool = True, reclaim_ids: bool = False):
+        """Explicit compaction; with ``reclaim_ids`` returns the old->new
+        table-id mapping (and re-keys the Table registry)."""
+        remap = compact_store(self.store, self.policy, full=full,
+                              reclaim_ids=reclaim_ids)
+        if remap is not None:
+            self.tables = {remap[t]: tab for t, tab in self.tables.items()
+                           if t in remap}
+        return remap
+
+    # ----------------------------------------------------------- persistence
+    def snapshot(self, path):
+        """Save the compacted live index; returns the manifest path."""
+        return snap.save(self.store, path)
+
+    @classmethod
+    def restore(cls, path, *, policy: CompactionPolicy | None = None,
+                auto_compact: bool = True) -> "LiveLake":
+        return cls(store=snap.load(path), policy=policy,
+                   auto_compact=auto_compact)
+
+    # ------------------------------------------------------------ inspection
+    def live_ids(self) -> list:
+        return self.store.live_ids()
+
+    def shape(self) -> dict:
+        return self.store.shape()
+
+    def __repr__(self):
+        s = self.store
+        return (f"LiveLake(tables={int(s.alive.sum())}, "
+                f"segments={len(s.segments)}, postings={s.n_postings}, "
+                f"epoch={s.epoch})")
