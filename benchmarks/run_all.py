@@ -5,8 +5,11 @@ Writes ``BENCH_2.json`` (repo root, uploaded as a CI artifact): per-workload
 ops/sec + latency percentiles, all measured through ``blend.connect`` /
 ``session.query`` / ``session.sql`` / ``DiscoveryEngine.serve_many`` — the
 same code paths users hit.  Also writes ``BENCH_3.json`` with the LiveLake
-mutation workloads: ``mutate/add_table_p50``, ``mutate/compact`` and
-``snapshot/load_vs_rebuild`` (index-build vs snapshot-restore speedup).
+mutation workloads (``mutate/add_table_p50``, ``mutate/compact``,
+``snapshot/load_vs_rebuild``) and ``BENCH_4.json`` with the semantic
+query-cache workloads: repeat-query hits vs cold serving (acceptance:
+>= 10x p50), partial hits over a shared subtree, unique-query miss
+overhead, batched warm serving, and the mutation-invalidation cycle.
 
     PYTHONPATH=src python benchmarks/run_all.py [--out PATH] [--full]
 
@@ -133,6 +136,111 @@ def live_workloads(lake, iters: int = 5) -> dict:
     return workloads
 
 
+def cache_workloads(lake, iters: int = 10) -> dict:
+    """Semantic query-cache serving workloads (BENCH_4)."""
+    from repro.core.lake import Table
+    from repro.serve.engine import DiscoveryEngine
+
+    rng = np.random.default_rng(4)
+    t = lake.tables[11]
+    rows = list(range(8))
+    impute = (blend.mc([(t.columns[0][r], t.columns[1][r]) for r in rows],
+                       k=40)
+              & blend.sc([t.columns[0][r] for r in rows], k=40)).top(10)
+    shared_sc = blend.sc([t.columns[0][r] for r in rows], k=40)
+    union_vote = blend.counter(
+        *[blend.sc(list(t.columns[c]), k=60) for c in range(3)], k=10)
+
+    def fresh_table(i, rows=40):
+        return Table(f"bench_cache_{i}",
+                     [[f"tok_{int(x)}" for x in rng.integers(0, 1500, rows)],
+                      [f"tok_{int(x)}" for x in rng.integers(0, 1500, rows)],
+                      [float(x) for x in np.round(rng.normal(0, 5, rows), 3)]])
+
+    workloads = {}
+    cold = blend.connect(lake)
+    cached = blend.connect(lake, cache=True)
+
+    # repeat-query: the identical request served over and over — the
+    # acceptance workload (hit p50 vs cold serving p50, >= 10x)
+    cold_stats = _measure(lambda: cold.query(impute).ids, iters=iters)
+    hit_stats = _measure(lambda: cached.query(impute).ids, iters=iters * 4)
+    hit_stats["cold_p50_ms"] = cold_stats["p50_ms"]
+    hit_stats["speedup_vs_cold"] = cold_stats["p50_ms"] / hit_stats["p50_ms"]
+    workloads["cache/repeat_hit"] = hit_stats
+
+    # partial hit: a stream of distinct queries all sharing one hot subtree
+    # (the subplan cache carries the shared seeker, the cold sibling runs)
+    def partial_stream(session, i):
+        q = (shared_sc | blend.kw([t.columns[1][i[0] % 30]], k=40)).top(10)
+        i[0] += 1
+        return session.query(q).ids
+
+    ic, iw = [0], [0]
+    cold_partial = _measure(lambda: partial_stream(cold, ic), iters=iters)
+    cached.query(shared_sc)                       # warm the shared subtree
+    part_stats = _measure(lambda: partial_stream(cached, iw),
+                          iters=iters)
+    part_stats["cold_p50_ms"] = cold_partial["p50_ms"]
+    part_stats["speedup_vs_cold"] = \
+        cold_partial["p50_ms"] / part_stats["p50_ms"]
+    workloads["cache/partial_hit"] = part_stats
+
+    # miss overhead: every query unique — the fingerprint + insert cost the
+    # cache adds on a workload it can never serve
+    def unique_stream(session, i):
+        base = int(i[0] * 8) % 1400
+        i[0] += 1
+        return session.query(
+            blend.sc([f"tok_{base + j}" for j in range(8)], k=40)).ids
+
+    iu, iv = [0], [500]
+    cold_uni = _measure(lambda: unique_stream(cold, iu), iters=iters)
+    miss_stats = _measure(lambda: unique_stream(cached, iv), iters=iters)
+    miss_stats["cold_p50_ms"] = cold_uni["p50_ms"]
+    miss_stats["overhead_vs_cold"] = \
+        miss_stats["p50_ms"] / cold_uni["p50_ms"]
+    workloads["cache/miss_overhead"] = miss_stats
+
+    # batched warm serving: serve_many over a fully-warmed request set —
+    # cache hits pay no drain share, so the whole batch collapses to lookups
+    engine = DiscoveryEngine(lake, cache=True)
+    reqs = _requests(lake, rng, 12)
+    engine.serve_many(reqs)                       # warm jit + cache
+    warm_stats = _measure(lambda: engine.serve_many(reqs), warmup=1,
+                          iters=max(iters // 2, 3))
+    warm_stats["requests_per_sec"] = warm_stats["ops_per_sec"] * len(reqs)
+    warm_stats["hit_ratio"] = (engine.session.cache.hits /
+                               max(engine.session.cache.hits
+                                   + engine.session.cache.misses
+                                   + engine.session.cache.partial, 1))
+    workloads["cache/batch12_warm"] = warm_stats
+
+    # mutation-invalidation: add -> serve (recompute) -> drop -> serve; the
+    # epoch wipe forces cold work, so this bounds the cost of staying fresh
+    # (bit-identity to a cold rebuild is asserted in tests/test_query_cache)
+    live_sess = blend.connect(lake, live=True, cache=True)
+    pool = [impute, union_vote]
+    for q in pool:
+        live_sess.query(q)
+    k = [0]
+
+    def mutate_cycle():
+        tid = live_sess.add_table(fresh_table(k[0]))
+        k[0] += 1
+        for q in pool:
+            live_sess.query(q).ids
+        live_sess.drop_table(tid)
+        for q in pool:
+            live_sess.query(q).ids
+
+    mut_stats = _measure(mutate_cycle, warmup=1, iters=max(iters // 2, 3))
+    mut_stats["invalidations"] = live_sess.cache.invalidations
+    mut_stats["cache_stats"] = live_sess.cache.stats()
+    workloads["cache/mutation_invalidation"] = mut_stats
+    return workloads
+
+
 def main(out_path: Path, full: bool = False, iters: int = 10) -> dict:
     rng = np.random.default_rng(7)
     lake = synthetic_lake(n_tables=200, rows=40, vocab=1500, seed=1)
@@ -213,9 +321,24 @@ def main(out_path: Path, full: bool = False, iters: int = 10) -> dict:
         json.dumps(live_payload, indent=2, sort_keys=True) + "\n")
     print(f"wrote {live_path}")
 
-    for name, s in {**workloads, **live}.items():
-        extra = (f" ({s['speedup_vs_rebuild']:.0f}x vs rebuild)"
-                 if "speedup_vs_rebuild" in s else "")
+    cache = cache_workloads(lake, iters=iters)
+    cache_payload = {
+        "bench": "BENCH_4",
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "lake": lake.stats(),
+        "workloads": cache,
+    }
+    cache_path = out_path.parent / "BENCH_4.json"
+    cache_path.write_text(
+        json.dumps(cache_payload, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {cache_path}")
+
+    for name, s in {**workloads, **live, **cache}.items():
+        extra = "".join(
+            f" ({s[key]:.0f}x vs {key.rsplit('_', 1)[-1]})"
+            for key in ("speedup_vs_rebuild", "speedup_vs_cold")
+            if key in s)
         print(f"{name:32s} {s['ops_per_sec']:10.1f} ops/s "
               f"p50={s['p50_ms']:.2f}ms p95={s['p95_ms']:.2f}ms{extra}")
     return payload

@@ -6,12 +6,12 @@ for the IR-to-paper mapping.
 """
 from repro.query import (And, BlendQLError, Compiled, Counter, DEFAULT_RULES,
                          Expr, Explain, Or, QueryResult, Seek, Session, Sub,
-                         connect, corr, counter, kw, lower, mc, parse,
-                         restore, rewrite, sc)
+                         connect, corr, counter, fingerprint_query, kw, lower,
+                         mc, parse, restore, rewrite, sc)
 
 __all__ = [
     "And", "BlendQLError", "Compiled", "Counter", "DEFAULT_RULES", "Expr",
     "Explain", "Or", "QueryResult", "Seek", "Session", "Sub", "connect",
-    "corr", "counter", "kw", "lower", "mc", "parse", "restore", "rewrite",
-    "sc",
+    "corr", "counter", "fingerprint_query", "kw", "lower", "mc", "parse",
+    "restore", "rewrite", "sc",
 ]

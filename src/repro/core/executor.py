@@ -46,6 +46,14 @@ class ExecInfo:
     node_seconds: dict = field(default_factory=dict)
     order: list = field(default_factory=list)
     overflow_parts: list = field(default_factory=list)
+    # query-cache accounting (serve/cache.py): seeker nodes served from the
+    # subplan cache (``cached_nodes``) vs actually dispatched
+    # (``seeker_runs``).  Telemetry only — ``serve_many`` excludes exact
+    # result-cache hits (CacheInfo.status == 'hit') from its drain
+    # denominator; a partial request dispatches combiner work even at zero
+    # seeker runs, so it keeps its share.
+    cached_nodes: list = field(default_factory=list)
+    seeker_runs: int = 0
 
     @property
     def total_seconds(self) -> float:
@@ -278,15 +286,23 @@ class Executor:
 
     # ------------------------------------------------------------------ plan
     def run(self, plan: Plan, optimize: bool = True,
-            cost_model: CostModel | None = None, sync: bool = True):
+            cost_model: CostModel | None = None, sync: bool = True,
+            cache=None):
+        """Execute ``plan``.  ``cache`` is an optional query-cache handle
+        (duck-typed ``seeker_key``/``get_seeker``/``put_seeker`` — see
+        serve/cache.py): unrestricted seeker runs are served from and stored
+        into its subplan level, short-circuiting ``run_seeker``.  Seekers
+        that would run under a threaded optimizer mask still execute, so a
+        partially-cached plan is bit-identical to a cold run."""
         self.refresh()          # one consistent epoch for the whole plan
         self._in_plan = True    # nested run_seeker calls must not re-refresh
         try:
-            return self._run(plan, optimize, cost_model, sync)
+            return self._run(plan, optimize, cost_model, sync, cache)
         finally:
             self._in_plan = False
 
-    def _run(self, plan: Plan, optimize: bool, cost_model, sync: bool):
+    def _run(self, plan: Plan, optimize: bool, cost_model, sync: bool,
+             cache=None):
         info = ExecInfo(optimized=optimize)
         ep = optimize_plan(plan, self.seeker_stats, cost_model) if optimize \
             else None
@@ -294,10 +310,24 @@ class Executor:
 
         def timed_seeker(name, spec, allowed=None):
             t0 = time.perf_counter()
-            rs = self.run_seeker(spec, allowed=allowed, sync=sync)
+            hit = None
+            key = None
+            if cache is not None and allowed is None:
+                key = cache.seeker_key(spec)
+                hit = cache.get_seeker(key)
+            if hit is not None:
+                rs = hit.result
+                info.overflow_parts.append(hit.overflow)
+                info.cached_nodes.append(name)
+            else:
+                rs = self.run_seeker(spec, allowed=allowed, sync=sync)
+                info.seeker_runs += 1
+                info.overflow_parts.append(self._last_overflow)
+                if key is not None:
+                    cache.put_seeker(key, rs, self._last_overflow,
+                                     self.n_tables)
             info.node_seconds[name] = time.perf_counter() - t0
             info.order.append(name)
-            info.overflow_parts.append(self._last_overflow)
             return rs
 
         def eval_node(name: str) -> comb.ResultSet:

@@ -40,6 +40,8 @@ imperative ``Plan.add`` frontend lowers through the same Session.
 from repro.query.logical import (And, Counter, Expr, Or, Seek, Sub, corr,
                                  counter, kw, mc, sc)
 from repro.query.lower import lower
+from repro.query.fingerprint import (fingerprint_expr, fingerprint_plan,
+                                     fingerprint_query, index_epoch_key)
 from repro.query.parse import BlendQLError, parse
 from repro.query.rules import DEFAULT_RULES, rewrite
 from repro.query.session import (Compiled, Explain, QueryResult, Session,
@@ -48,6 +50,7 @@ from repro.query.session import (Compiled, Explain, QueryResult, Session,
 __all__ = [
     "And", "BlendQLError", "Compiled", "Counter", "DEFAULT_RULES", "Expr",
     "Explain", "Or", "QueryResult", "Seek", "Session", "Sub", "connect",
-    "corr", "counter", "kw", "lower", "mc", "parse", "restore", "rewrite",
-    "sc",
+    "corr", "counter", "fingerprint_expr", "fingerprint_plan",
+    "fingerprint_query", "index_epoch_key", "kw", "lower", "mc", "parse",
+    "restore", "rewrite", "sc",
 ]

@@ -83,6 +83,13 @@ class Expr:
             lines.append(c.render(indent + 1, _shared))
         return "\n".join(lines)
 
+    def fingerprint(self, top: int | None = None) -> str:
+        """Canonical content hash of this query (query/fingerprint.py):
+        rewritten to normal form, commutative children order-blind — the
+        identity the query cache serves repeats under."""
+        from repro.query.fingerprint import fingerprint_query
+        return fingerprint_query(self, top=top)
+
     def to_sql(self) -> str:
         """Full BlendQL statement for this expression (round-trips through
         ``repro.query.parse.parse``)."""

@@ -183,6 +183,16 @@ def _egs(e: L.Expr) -> tuple:
     return tuple(n.eg for n in L.walk(e) if isinstance(n, L.And))
 
 
+def canonical_expr(e: L.Expr, top: int | None = None) -> L.Expr:
+    """The normal form the query cache fingerprints (query/fingerprint.py):
+    the full rule pipeline run to fixpoint, result only.  Rewriting before
+    hashing means nesting and duplication differences the rules remove —
+    ``(a & b) & c`` vs ``a & b & c``, ``x | x`` vs ``x`` — never split cache
+    entries; the commutative child ordering itself is canonicalized inside
+    the fingerprint, not here, so execution order is untouched."""
+    return rewrite(e, top=top).expr
+
+
 # ------------------------------------------------- physical-plan dead pruning
 def prune_dead_nodes(plan) -> list:
     """Drop plan nodes unreachable from the output (shares the traversal

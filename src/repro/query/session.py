@@ -45,6 +45,8 @@ class QueryResult:
     compiled: Compiled
     seconds: float
     _ids: list | None = None
+    cache: object | None = None       # serve.cache.CacheInfo (None: cache off)
+    _entry: object | None = None      # backing CachedResult on cache hits
 
     @property
     def scores(self):
@@ -55,9 +57,12 @@ class QueryResult:
     @property
     def ids(self) -> list:
         """Ranked table ids, score-descending (materialized lazily so a
-        ``sync=False`` dispatch stays host-synchronization-free)."""
+        ``sync=False`` dispatch stays host-synchronization-free; a cache hit
+        writes the list back into its entry so later hits skip the sort)."""
         if self._ids is None:
             self._ids = [int(t) for t in self.result.ids()]
+            if self._entry is not None and self._entry.ids is None:
+                self._entry.ids = self._ids
         return self._ids
 
     @property
@@ -78,6 +83,7 @@ class Explain:
     overflow: int
     ids: list
     index_shape: dict = field(default_factory=dict)   # live-lake observability
+    cache: dict = field(default_factory=dict)         # query-cache telemetry
 
     def __str__(self):
         lines = ["== logical plan =="]
@@ -93,6 +99,16 @@ class Explain:
             lines.append(f"  live tables: {s['live_tables']}"
                          + (f"   tombstoned: {s['tombstoned']}"
                             if s["tombstoned"] else ""))
+        if self.cache:
+            c = self.cache
+            lines.append("== cache ==")
+            lines.append(f"  status: {c['status']}   "
+                         f"seekers: {c['seekers_run']} run / "
+                         f"{c['seekers_cached']} cached   "
+                         f"epoch: {c['epoch']}")
+            lines.append(f"  entries: {c['entries']}   bytes: {c['bytes']}   "
+                         f"evictions: {c['evictions']}   "
+                         f"invalidations: {c['invalidations']}")
         lines.append("== physical order (ranked execution groups) ==")
         if self.physical_order:
             for comb, seekers in self.physical_order.items():
@@ -117,18 +133,34 @@ class Session:
     (``connect(lake, live=True)``) the Session additionally exposes the
     mutation API — ``add_table`` / ``drop_table`` / ``compact`` /
     ``snapshot`` — and ``explain`` reports the index shape (segments,
-    postings, tombstones, epoch)."""
+    postings, tombstones, epoch).  With ``connect(lake, cache=True)`` the
+    Session also owns a semantic QueryCache (serve/cache.py): plan, result
+    and seeker levels keyed on canonical fingerprints and invalidated by
+    ``(epoch, index fingerprint)``."""
 
     def __init__(self, executor: Executor, lake=None,
-                 cost_model: CostModel | None = None, live=None):
+                 cost_model: CostModel | None = None, live=None, cache=None):
         self.executor = executor
         self.lake = lake
         self.cost_model = cost_model
         self.live = live                  # LiveLake handle or None
+        self.cache = cache                # serve.cache.QueryCache or None
 
     @property
     def index(self):
         return self.executor.index
+
+    def _cache_config(self) -> tuple:
+        """The execution-identity part of the cache key: entries produced
+        under different executor opts (capacity ladder, probe backend) or a
+        different cost model (seeker ranking -> f32 sum order) are different
+        computations and must never cross-serve (serve/cache.py begin)."""
+        from repro.query.fingerprint import object_nonce
+        ex = self.executor
+        return (ex.backend, ex.interpret, ex.m_cap_max, ex.row_cap,
+                ex.bucket_width,
+                object_nonce(self.cost_model)
+                if self.cost_model is not None else 0)
 
     # ------------------------------------------------------------ mutations
     def _require_live(self):
@@ -168,7 +200,16 @@ class Session:
 
     # ---------------------------------------------------------------- compile
     def compile(self, q, top: int | None = None) -> Compiled:
-        """Expression / BlendQL string / legacy Plan -> Compiled."""
+        """Expression / BlendQL string / legacy Plan -> Compiled.  With the
+        query cache enabled, compiled plans are memoized by query content
+        (strings and expressions are hashable; compilation is
+        index-independent, so plan entries survive epoch changes)."""
+        plan_key = None
+        if self.cache is not None and isinstance(q, (str, L.Expr)):
+            plan_key = (q, top)
+            got = self.cache.get_plan(plan_key)
+            if got is not None:
+                return got
         if isinstance(q, str):
             q = parse(q)
         if isinstance(q, Plan):
@@ -185,20 +226,63 @@ class Session:
         rewritten = rewrite(q, top=top)
         plan, node_of = lower(rewritten.expr)
         prune_dead_nodes(plan)        # lowering emits none; shared traversal
-        return Compiled(plan=plan, logical=rewritten.expr, raw=q,
-                        applied_rules=list(rewritten.applied),
-                        node_of=node_of)
+        compiled = Compiled(plan=plan, logical=rewritten.expr, raw=q,
+                            applied_rules=list(rewritten.applied),
+                            node_of=node_of)
+        if plan_key is not None:
+            self.cache.put_plan(plan_key, compiled)
+        return compiled
 
     # ---------------------------------------------------------------- execute
     def query(self, q, top: int | None = None, optimize: bool = True,
               sync: bool = True) -> QueryResult:
-        """Compile + execute; ``top`` overrides/sets the root result limit."""
+        """Compile + execute; ``top`` overrides/sets the root result limit.
+
+        With the query cache enabled (``connect(lake, cache=True)``) the
+        request is first validated against the ``(epoch, index fingerprint)``
+        key, then served from the exact-result cache when the canonical plan
+        fingerprint matches; otherwise the executor runs with the subplan
+        cache, which short-circuits unrestricted seeker runs (a 'partial'
+        hit).  Results are bit-identical to a cold run in every case."""
         compiled = q if isinstance(q, Compiled) else self.compile(q, top=top)
+        cache = self.cache
         t0 = time.perf_counter()
+        if cache is None:
+            rs, info = self.executor.run(compiled.plan, optimize=optimize,
+                                         cost_model=self.cost_model,
+                                         sync=sync)
+            return QueryResult(result=rs, info=info, compiled=compiled,
+                               seconds=time.perf_counter() - t0)
+        cache.begin(self.executor.index, self._cache_config())
+        rkey = cache.result_key(compiled.plan, optimize)
+        entry = cache.get_result(rkey)
+        if entry is not None:
+            cache.note("hit")
+            # ids materialize through the lazy property (written back into
+            # the entry): a sync=False hit on an entry stored earlier in the
+            # same undrained batch must not block the dispatch loop
+            if sync and entry.ids is None:
+                entry.ids = [int(t) for t in entry.result.ids()]
+            cinfo = cache.request_info("hit")
+            return QueryResult(result=entry.result, info=entry.info,
+                               compiled=compiled,
+                               seconds=time.perf_counter() - t0,
+                               _ids=entry.ids, cache=cinfo, _entry=entry)
+        from repro.serve.cache import CachedResult   # lazy: avoids a cycle
         rs, info = self.executor.run(compiled.plan, optimize=optimize,
-                                     cost_model=self.cost_model, sync=sync)
+                                     cost_model=self.cost_model, sync=sync,
+                                     cache=cache)
+        cache.put_result(rkey, CachedResult(result=rs, info=info,
+                                            plan_nodes=len(
+                                                compiled.plan.nodes)),
+                         n_tables=self.executor.n_tables)
+        status = "partial" if info.cached_nodes else "miss"
+        cache.note(status)
+        cinfo = cache.request_info(status,
+                                   seekers_cached=len(info.cached_nodes),
+                                   seekers_run=info.seeker_runs)
         return QueryResult(result=rs, info=info, compiled=compiled,
-                           seconds=time.perf_counter() - t0)
+                           seconds=time.perf_counter() - t0, cache=cinfo)
 
     def sql(self, text: str, optimize: bool = True,
             sync: bool = True) -> QueryResult:
@@ -225,19 +309,36 @@ class Session:
             ranked = {name: list(eg.seekers) for name, eg in ep.groups.items()}
         info = ExecInfo(optimized=optimize)
         ids: list = []
+        cache_info: dict = {}
         if execute:
             res = self.query(compiled, optimize=optimize)
             info, ids = res.info, res.ids
+            if res.cache is not None:
+                cache_info = res.cache.as_dict()
         return Explain(logical_tree=tree,
                        applied_rules=list(compiled.applied_rules),
                        physical_order=ranked, exec_order=list(info.order),
                        node_seconds=dict(info.node_seconds),
                        overflow=info.overflow if execute else 0, ids=ids,
-                       index_shape=self.index_shape())
+                       index_shape=self.index_shape(), cache=cache_info)
+
+
+def _make_cache(cache):
+    """``cache=`` argument -> QueryCache | None: False/None disables, True
+    uses the default byte budget, an int is the budget, a QueryCache
+    instance is used as-is (lazy import: serve/ sits above query/)."""
+    if not cache:
+        return None
+    from repro.serve.cache import QueryCache
+    if isinstance(cache, QueryCache):
+        return cache
+    if cache is True:
+        return QueryCache()
+    return QueryCache(max_bytes=int(cache))
 
 
 def connect(lake, cost_model: CostModel | None = None, live: bool = False,
-            **executor_opts) -> Session:
+            cache=False, **executor_opts) -> Session:
     """Open a discovery session on a lake: builds the unified index and the
     executor (kwargs forwarded: ``backend=``, ``interpret=``, ``m_cap_max=``,
     ...), returning the Session handle that serves queries.
@@ -246,22 +347,30 @@ def connect(lake, cost_model: CostModel | None = None, live: bool = False,
     (repro/store): the session gains ``add_table`` / ``drop_table`` /
     ``compact`` / ``snapshot`` and queries keep serving — bit-identically to
     a from-scratch rebuild — while the lake evolves.  ``lake`` may also be
-    an existing ``LiveLake`` handle."""
+    an existing ``LiveLake`` handle.
+
+    ``cache=True`` (or a byte budget / QueryCache instance) enables the
+    semantic query cache (serve/cache.py): repeated or subtree-sharing
+    queries are served from compiled-plan, exact-result, and per-seeker
+    caches, all invalidated by the store epoch so mutations never serve
+    stale ids."""
+    qc = _make_cache(cache)
     if live:
         from repro.store.live import LiveLake
         ll = lake if isinstance(lake, LiveLake) else LiveLake(lake)
         executor = Executor(ll.store, **executor_opts)
         return Session(executor, lake=None if lake is ll else lake,
-                       cost_model=cost_model, live=ll)
+                       cost_model=cost_model, live=ll, cache=qc)
     executor = Executor(build_index(lake), **executor_opts)
-    return Session(executor, lake=lake, cost_model=cost_model)
+    return Session(executor, lake=lake, cost_model=cost_model, cache=qc)
 
 
-def restore(path, cost_model: CostModel | None = None,
+def restore(path, cost_model: CostModel | None = None, cache=False,
             **executor_opts) -> Session:
     """Open a live session from a snapshot (store/snapshot.py) — no
     re-indexing: the server restart path."""
     from repro.store.live import LiveLake
     ll = LiveLake.restore(path)
     executor = Executor(ll.store, **executor_opts)
-    return Session(executor, cost_model=cost_model, live=ll)
+    return Session(executor, cost_model=cost_model, live=ll,
+                   cache=_make_cache(cache))

@@ -41,10 +41,18 @@ class DiscoveryResponse:
     # per-request ExecInfo (previously dropped on the floor): what executed,
     # in what order, how long each node took, and the match-buffer overflow —
     # session.explain and the benchmark runner read these without re-running
+    # NOTE: on a cache hit (cache['status'] == 'hit') node_seconds/order/
+    # overflow describe the PRODUCING run stored with the entry — this
+    # request executed nothing; ``seconds`` is its real cost.  Consumers
+    # aggregating executed work should filter on the cache status.
     node_seconds: dict = field(default_factory=dict)
     order: list = field(default_factory=list)
     overflow: int = 0
     applied_rules: list = field(default_factory=list)
+    # query-cache telemetry (serve/cache.py CacheInfo.as_dict()): status
+    # hit/partial/miss, seekers served vs run, resident entries/bytes,
+    # evictions and epoch invalidations.  None when the cache is disabled.
+    cache: dict | None = None
 
     @property
     def total_node_seconds(self) -> float:
@@ -59,14 +67,20 @@ class DiscoveryEngine:
     lake: ``add_table`` / ``drop_table`` / ``compact`` / ``snapshot``
     forward to the Session's LiveLake, and in-flight ``serve`` calls always
     observe one consistent index epoch (the executor refreshes between
-    requests, never inside one)."""
+    requests, never inside one).
+
+    With ``cache=True`` (or a byte budget) the Session serves repeats from
+    the semantic query cache (serve/cache.py) — ``DiscoveryResponse.cache``
+    reports hit/partial/miss plus resident entries/bytes, and mutations
+    invalidate by epoch so cached ids are never stale."""
 
     def __init__(self, lake, cost_model=None, backend: str = "sorted",
-                 interpret: bool = False, session=None, live: bool = False):
+                 interpret: bool = False, session=None, live: bool = False,
+                 cache=False):
         if session is not None:
-            if backend != "sorted" or interpret or live:
-                raise ValueError("backend/interpret/live are fixed by the "
-                                 "given session; pass them to connect() "
+            if backend != "sorted" or interpret or live or cache:
+                raise ValueError("backend/interpret/live/cache are fixed by "
+                                 "the given session; pass them to connect() "
                                  "instead")
             if cost_model is not None:
                 session.cost_model = cost_model
@@ -74,7 +88,7 @@ class DiscoveryEngine:
         else:
             self.session = connect(lake, cost_model=cost_model,
                                    backend=backend, interpret=interpret,
-                                   live=live)
+                                   live=live, cache=cache)
         self.lake = lake
 
     # -------------------------------------------------- live-lake mutations
@@ -112,14 +126,28 @@ class DiscoveryEngine:
     def cost_model(self, model):
         self.session.cost_model = model
 
-    def serve(self, query, optimize: bool = True) -> DiscoveryResponse:
-        res = self.session.query(query, optimize=optimize)
-        return DiscoveryResponse(table_ids=res.ids, seconds=res.seconds,
+    @staticmethod
+    def _response(res, seconds: float) -> DiscoveryResponse:
+        return DiscoveryResponse(table_ids=res.ids, seconds=seconds,
                                  plan_nodes=len(res.compiled.plan.nodes),
                                  node_seconds=dict(res.info.node_seconds),
                                  order=list(res.info.order),
                                  overflow=res.info.overflow,
-                                 applied_rules=list(res.applied_rules))
+                                 applied_rules=list(res.applied_rules),
+                                 cache=res.cache.as_dict()
+                                 if res.cache is not None else None)
+
+    def serve(self, query, optimize: bool = True) -> DiscoveryResponse:
+        res = self.session.query(query, optimize=optimize)
+        return self._response(res, res.seconds)
+
+    @staticmethod
+    def _dispatched(res) -> bool:
+        """Did this request enqueue any device work?  Only an exact
+        result-cache hit enqueues nothing — a 'partial' request still
+        dispatches its combiner/top-k ops even when every seeker came from
+        the subplan cache, so it keeps its drain share."""
+        return res.cache is None or res.cache.status != "hit"
 
     def serve_many(self, queries, optimize: bool = True):
         """Batched serving: every seeker of every request is dispatched
@@ -131,21 +159,20 @@ class DiscoveryEngine:
         ``seconds`` is that request's own compile+dispatch (trace/enqueue)
         time plus an equal share of the single device drain — device time
         within the batch is fungible, so only the host-side cost is
-        attributed."""
+        attributed.  The share is split over the requests that actually
+        dispatched device work: an exact query-cache hit enqueued nothing,
+        so it pays no drain share and its reported latency stays honest."""
         session = self.session
         pending = []
         for q in queries:
             t0 = time.perf_counter()
             res = session.query(q, optimize=optimize, sync=False)
             pending.append((res, time.perf_counter() - t0))
+        hot = [res for res, _ in pending if self._dispatched(res)]
         t0 = time.perf_counter()
-        jax.block_until_ready([res.scores for res, _ in pending])
-        drain_share = (time.perf_counter() - t0) / max(len(pending), 1)
-        return [DiscoveryResponse(
-                    table_ids=res.ids, seconds=dispatch_s + drain_share,
-                    plan_nodes=len(res.compiled.plan.nodes),
-                    node_seconds=dict(res.info.node_seconds),
-                    order=list(res.info.order),
-                    overflow=res.info.overflow,
-                    applied_rules=list(res.applied_rules))
+        jax.block_until_ready([res.scores for res in hot])
+        drain_share = (time.perf_counter() - t0) / max(len(hot), 1)
+        return [self._response(
+                    res, dispatch_s + (drain_share if self._dispatched(res)
+                                       else 0.0))
                 for res, dispatch_s in pending]

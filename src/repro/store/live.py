@@ -80,6 +80,14 @@ class LiveLake:
                    auto_compact=auto_compact)
 
     # ------------------------------------------------------------ inspection
+    def cache_key(self) -> tuple:
+        """``(epoch, store fingerprint)`` — the query-cache invalidation key
+        (query/fingerprint.py).  Every mutation above bumps the epoch, so a
+        QueryCache validated against this key drops its result/seeker levels
+        before the next query can observe the mutated index."""
+        from repro.query.fingerprint import index_epoch_key
+        return index_epoch_key(self.store)
+
     def live_ids(self) -> list:
         return self.store.live_ids()
 

@@ -1,0 +1,129 @@
+"""Conformance sweep: both probe backends vs the brute-force oracle.
+
+Every seeker and every combiner, on randomized lakes, must reproduce the
+pure-NumPy ground truth of tests/oracle.py bit-for-bit — scores, masks, and
+tie-broken id order.  This is the ground-truth anchor the query-cache parity
+suite (tests/test_query_cache.py) leans on: if the engine matches the oracle
+and the cache matches the engine, the cache matches the truth.
+"""
+import numpy as np
+import pytest
+
+from repro.core import combiners as comb
+from repro.core.executor import Executor
+from repro.core.index import build_index
+from repro.core.lake import synthetic_lake
+from repro.core.plan import Combiners, Plan, Seekers
+
+from oracle import (oracle_ids, oracle_run, oracle_seeker, oracle_topk)
+
+BACKENDS = [("sorted", False), ("bucket", True)]
+
+
+def conformance_lake(seed):
+    return synthetic_lake(n_tables=12, rows=12, cols=4, vocab=60, seed=seed)
+
+
+def random_specs(lake, rng, k):
+    """One spec of each seeker kind with randomized hit/miss/dup queries."""
+    t = lake.tables[int(rng.integers(0, lake.n_tables))]
+    rows = [int(r) for r in rng.integers(0, t.n_rows, 6)]
+    vals = [t.columns[0][r] for r in rows] + ["never_in_lake"]
+    words = ([t.columns[1][rows[0]], t.columns[2][rows[1]],
+              t.columns[3][rows[2]]] + vals[:2])
+    tuples = ([(t.columns[0][r], t.columns[1][r]) for r in rows[:4]]
+              + [(t.columns[0][rows[0]], t.columns[1][rows[1]])]   # misaligned
+              + [(t.columns[0][rows[0]], t.columns[1][rows[0]])])  # duplicate
+    joins = [t.columns[0][r] for r in rows] + [t.columns[0][r] for r in rows]
+    targets = [float(x) for x in rng.normal(0, 1, len(joins)).round(3)]
+    return [
+        Seekers.SC(vals, k=k),
+        Seekers.KW(words, k=k),
+        Seekers.MC(tuples, k=k),
+        Seekers.Correlation(joins, targets, k=k, h=256),
+        Seekers.Correlation(joins, targets, k=k, h=8),        # rank filter on
+        Seekers.Correlation(joins, targets, k=k, h=8, sampling="rand"),
+    ]
+
+
+def conformance_plan(lake, rng, k):
+    specs = random_specs(lake, rng, k)
+    plan = Plan()
+    plan.add("sc", specs[0])
+    plan.add("kw", specs[1])
+    plan.add("mc", specs[2])
+    plan.add("c", specs[3])
+    plan.add("and", Combiners.Intersect(k=k), ["sc", "mc"])
+    plan.add("or", Combiners.Union(k=k), ["and", "c"])
+    plan.add("cnt", Combiners.Counter(k=k), ["sc", "kw"])
+    plan.add("out", Combiners.Difference(k=k), ["or", "cnt"])
+    return plan
+
+
+def assert_resultset_matches(rs, oscores, omask, msg=""):
+    np.testing.assert_array_equal(np.asarray(rs.scores), oscores, err_msg=msg)
+    np.testing.assert_array_equal(np.asarray(rs.mask), omask, err_msg=msg)
+
+
+@pytest.mark.parametrize("backend,interpret", BACKENDS)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_all_seekers_match_oracle(backend, interpret, seed):
+    lake = conformance_lake(seed)
+    ex = Executor(build_index(lake), backend=backend, interpret=interpret)
+    rng = np.random.default_rng(100 + seed)
+    for spec in random_specs(lake, rng, k=lake.n_tables):
+        rs = ex.run_seeker(spec)
+        oscores, omask = oracle_topk(oracle_seeker(lake, spec), spec.k)
+        assert_resultset_matches(rs, oscores, omask,
+                                 f"{spec.kind} h={spec.h} {spec.sampling}")
+
+
+@pytest.mark.parametrize("backend,interpret", BACKENDS)
+def test_seekers_match_oracle_binding_k(backend, interpret):
+    """With a binding top-k the cut itself (ties included) must match."""
+    lake = conformance_lake(3)
+    ex = Executor(build_index(lake), backend=backend, interpret=interpret)
+    rng = np.random.default_rng(7)
+    for spec in random_specs(lake, rng, k=4):
+        rs = ex.run_seeker(spec)
+        oscores, omask = oracle_topk(oracle_seeker(lake, spec), spec.k)
+        assert_resultset_matches(rs, oscores, omask, spec.kind)
+        assert [int(t) for t in rs.ids()] == oracle_ids(oscores, omask)
+
+
+@pytest.mark.parametrize("backend,interpret", BACKENDS)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_combiner_plan_matches_oracle(backend, interpret, seed):
+    """A 4-seeker / 4-combiner DAG end-to-end (unoptimized execution is
+    exactly the oracle's evaluation order)."""
+    lake = conformance_lake(seed)
+    ex = Executor(build_index(lake), backend=backend, interpret=interpret)
+    plan = conformance_plan(lake, np.random.default_rng(200 + seed), k=8)
+    rs, _ = ex.run(plan, optimize=False)
+    oscores, omask = oracle_run(lake, plan)
+    assert_resultset_matches(rs, oscores, omask)
+    assert [int(t) for t in rs.ids()] == oracle_ids(oscores, omask)
+
+
+def test_optimized_run_preserves_oracle_ids():
+    """With per-node k lifted to n_tables the optimizer's mask threading is
+    output-preserving — optimized ids must equal the oracle's."""
+    lake = conformance_lake(4)
+    ex = Executor(build_index(lake))
+    plan = conformance_plan(lake, np.random.default_rng(42), k=lake.n_tables)
+    rs, _ = ex.run(plan, optimize=True)
+    oscores, omask = oracle_run(lake, plan)
+    assert [int(t) for t in rs.ids()] == oracle_ids(oscores, omask)
+
+
+def test_oracle_topk_matches_device_topk():
+    """The oracle's top-k (stable index-order tie-break, positive-only)
+    is bit-compatible with combiners.topk_result."""
+    rng = np.random.default_rng(11)
+    for trial in range(5):
+        scores = rng.integers(0, 4, 40).astype(np.float32)   # heavy ties
+        for k in (1, 5, 40, 1 << 20):
+            dev = comb.topk_result(np.asarray(scores), k)
+            oscores, omask = oracle_topk(scores, k)
+            np.testing.assert_array_equal(np.asarray(dev.scores), oscores)
+            np.testing.assert_array_equal(np.asarray(dev.mask), omask)

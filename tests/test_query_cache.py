@@ -1,0 +1,516 @@
+"""QueryCache: canonical fingerprints, hit/partial/miss serving, epoch
+invalidation under LiveLake mutations, LRU byte budgets, serve_many drain
+accounting, and the cache-vs-cold bit-identical parity property.
+
+Ground truth: a cold session over the same store must see identical ids at
+every step (tests/test_oracle.py anchors that engine to the brute-force
+oracle), and the mutation-invalidation workload is additionally checked
+against a from-scratch rebuild of the live tables.
+"""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+import blend
+from repro.core.executor import Executor
+from repro.core.index import build_index
+from repro.core.lake import DataLake, Table, synthetic_lake
+from repro.core.plan import Combiners, Plan, Seekers
+from repro.query.fingerprint import (fingerprint_expr, fingerprint_plan,
+                                     fingerprint_query, index_epoch_key)
+from repro.query.lower import lower
+from repro.query.rules import rewrite
+from repro.serve.cache import QueryCache
+from repro.serve.engine import DiscoveryEngine
+from repro.store import LiveLake
+
+
+def cache_lake(seed=5, n_tables=16):
+    return synthetic_lake(n_tables=n_tables, rows=14, cols=4, vocab=200,
+                          seed=seed)
+
+
+def extra_table(i, rows=10, vocab=200):
+    rng = np.random.default_rng(2000 + i)
+    return Table(f"qc_extra{i}",
+                 [[f"tok_{int(x)}" for x in rng.integers(0, vocab, rows)],
+                  [f"tok_{int(x)}" for x in rng.integers(0, vocab, rows)],
+                  [float(x) for x in np.round(rng.normal(0, 5, rows), 3)]])
+
+
+def query_pool(lake, k=20):
+    """Queries with shared subtrees (the repetitive-workload shape)."""
+    t = lake.tables[3]
+    sc = blend.sc(list(t.columns[0][:8]), k=k)
+    kw = blend.kw([t.columns[1][0], t.columns[1][2]], k=k)
+    mc = blend.mc([(t.columns[0][r], t.columns[1][r]) for r in range(4)], k=k)
+    corr = blend.corr(list(t.columns[0][:8]),
+                      [float(i) for i in range(8)], k=k, h=64)
+    return [(sc & mc).top(10),
+            (sc | corr).top(10),                    # shares sc
+            (blend.counter(sc, kw, mc, k=10)),      # shares sc, mc
+            (mc - kw).top(10)]
+
+
+# --------------------------------------------------------------------------
+# canonical fingerprints
+# --------------------------------------------------------------------------
+
+def test_fingerprint_commutative_and_normalized():
+    a = blend.sc(["x", "y"], k=30)
+    b = blend.kw(["w"], k=30)
+    c = blend.mc([("u", "v")], k=30)
+    assert fingerprint_query(a & b) == fingerprint_query(b & a)
+    assert fingerprint_query((a & b) & c) == fingerprint_query(a & (b & c))
+    assert fingerprint_query(a | a) == fingerprint_query(a)   # fold
+    assert fingerprint_query(a - b) != fingerprint_query(b - a)
+    assert fingerprint_query(a & b) != fingerprint_query(a | b)
+    assert fingerprint_query(a & b, top=5) != fingerprint_query(a & b)
+    assert (a & b).fingerprint() == (b & a).fingerprint()
+
+
+def test_fingerprint_order_blindness_limited_to_exact_merges():
+    """Union/counter are bit-commutative at any arity; a >= 3-ary intersect
+    re-associates an f32 score sum, so permuted spellings keep separate
+    entries (a hit must equal that spelling's own cold run)."""
+    a = blend.sc(["x"], k=30)
+    b = blend.kw(["y"], k=30)
+    c = blend.mc([("u", "v")], k=30)
+    assert fingerprint_query(a | b | c) == fingerprint_query(c | b | a)
+    assert blend.counter(a, b, c).fingerprint() == \
+        blend.counter(c, a, b).fingerprint()
+    assert fingerprint_query(a & b & c) != fingerprint_query(c & b & a)
+    # both associations flatten to the same written order and still share
+    assert fingerprint_query((a & b) & c) == fingerprint_query(a & (b & c))
+
+
+def test_fingerprint_numpy_scalars_match_python_values():
+    assert blend.sc([np.int32(2)]).fingerprint() == \
+        blend.sc([2]).fingerprint() == blend.sc([np.float64(2.0)]).fingerprint()
+    assert blend.sc([np.float32(2.5)]).fingerprint() == \
+        blend.sc([2.5]).fingerprint()
+    assert blend.kw([np.str_("tok")]).fingerprint() == \
+        blend.kw(["tok"]).fingerprint()
+
+
+def test_fingerprint_value_set_semantics():
+    assert blend.sc(["x", "y"]).fingerprint() == \
+        blend.sc(["y", "x", "x"]).fingerprint()
+    assert blend.sc([2]).fingerprint() == blend.sc([2.0]).fingerprint()
+    assert blend.sc([2]).fingerprint() != blend.sc(["2"]).fingerprint()
+    assert blend.sc(["x"]).fingerprint() != blend.kw(["x"]).fingerprint()
+    # MC tuples: position-independent within a tuple, multiset across tuples
+    assert blend.mc([("u", "v")]).fingerprint() == \
+        blend.mc([("v", "u")]).fingerprint()
+    assert blend.mc([("u", "v"), ("v", "u")]).fingerprint() != \
+        blend.mc([("u", "v")]).fingerprint()
+    # C pairs dedupe; h / sampling are part of the identity
+    j, tg = ["a", "b", "a"], [1.0, 2.0, 1.0]
+    assert blend.corr(j, tg).fingerprint() == \
+        blend.corr(["a", "b"], [1.0, 2.0]).fingerprint()
+    assert blend.corr(j, tg, h=64).fingerprint() != \
+        blend.corr(j, tg, h=128).fingerprint()
+    # permuted C pairs are NOT shared: the executor's k0/k1 split thresholds
+    # on tgt.mean(), which can move by an ulp under pair reordering
+    assert blend.corr(["j1", "j2", "j3"], [0.1, 0.2, 0.3]).fingerprint() != \
+        blend.corr(["j3", "j2", "j1"], [0.3, 0.2, 0.1]).fingerprint()
+
+
+def test_fingerprint_plan_agrees_with_expr():
+    a = blend.sc(["x", "y"], k=30)
+    b = blend.kw(["w"], k=30)
+    e = rewrite((a & b) | b, top=10).expr
+    plan, _ = lower(e)
+    assert fingerprint_plan(plan) == fingerprint_expr(e)
+    # a hand-built legacy plan of the same query shares the fingerprint
+    legacy = Plan()
+    legacy.add("s1", Seekers.KW(["w"], k=30))
+    legacy.add("s2", Seekers.SC(["x", "y"], k=30))
+    legacy.add("and", Combiners.Intersect(k=1 << 20), ["s2", "s1"])
+    legacy.add("or", Combiners.Union(k=10), ["and", "s1"])
+    assert fingerprint_plan(legacy) == fingerprint_expr(e)
+
+
+def test_index_epoch_key_moves_on_every_mutation():
+    lake = cache_lake(n_tables=8)
+    ll = LiveLake(lake, auto_compact=False)
+    keys = [ll.cache_key()]
+    tid = ll.add_table(extra_table(0))
+    keys.append(index_epoch_key(ll.store))
+    ll.drop_table(tid)
+    keys.append(ll.cache_key())
+    ll.compact()
+    keys.append(ll.cache_key())
+    assert len(set(keys)) == len(keys)            # every mutation moved it
+    # two different stores never share a key, even at equal epochs
+    other = LiveLake(cache_lake(n_tables=8), auto_compact=False)
+    assert other.cache_key() != keys[0]
+
+
+def test_shared_cache_never_crosses_index_objects():
+    """A caller-owned QueryCache reused across connects must never serve one
+    lake's ids for another — even when the dead index's memory address is
+    reused by a same-shaped successor (id() reuse; guarded by the nonce)."""
+    import gc
+    qc = QueryCache()
+    lake_a = cache_lake(seed=81, n_tables=6)
+    lake_b = cache_lake(seed=82, n_tables=6)
+    q = blend.kw([lake_a.tables[0].columns[0][0]], k=6)
+    s1 = blend.connect(lake_a, cache=qc)
+    ids_a = s1.query(q).ids
+    key_a = s1.cache._epoch_key
+    del s1
+    gc.collect()
+    s2 = blend.connect(lake_b, cache=qc)
+    r = s2.query(q)
+    assert s2.cache._epoch_key != key_a           # fresh index, fresh key
+    assert r.cache.status != "hit"                # never lake_a's entry
+    cold = blend.connect(lake_b)
+    assert r.ids == cold.query(q).ids
+
+
+# --------------------------------------------------------------------------
+# hit / partial / miss serving
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def cached_session():
+    return blend.connect(cache_lake(), cache=True)
+
+
+def test_exact_hit_serves_identical_ids(cached_session):
+    s = cached_session
+    q = query_pool(s.lake)[0]
+    r1 = s.query(q)
+    r2 = s.query(q)
+    assert r1.cache.status in ("miss", "partial", "hit")
+    assert r2.cache.status == "hit" and r2.ids == r1.ids
+    assert r2.cache.seekers_run == 0
+    np.testing.assert_array_equal(np.asarray(r1.result.scores),
+                                  np.asarray(r2.result.scores))
+    # commuted and SQL-text forms resolve to the same entry
+    t = s.lake.tables[3]
+    sc = blend.sc(list(t.columns[0][:8]), k=20)
+    mc = blend.mc([(t.columns[0][r], t.columns[1][r]) for r in range(4)],
+                  k=20)
+    assert s.query((mc & sc).top(10)).cache.status == "hit"
+    assert s.sql(q.to_sql()).cache.status == "hit"
+
+
+def test_partial_hit_reuses_shared_seeker_bit_identically(cached_session):
+    s = cached_session
+    pool = query_pool(s.lake)
+    s.query(pool[0])                        # warms sc (and mc) unrestricted?
+    r = s.query(pool[1])                    # shares the sc leaf
+    assert r.cache.status in ("partial", "miss", "hit")
+    cold = blend.connect(s.lake)
+    for q in pool:
+        assert s.query(q).ids == cold.query(q).ids
+
+
+def test_optimize_flag_is_part_of_the_result_key():
+    lake = cache_lake(seed=9)
+    s = blend.connect(lake, cache=True)
+    q = query_pool(lake)[0]
+    r_opt = s.query(q)
+    r_no = s.query(q, optimize=False)
+    assert r_no.cache.status != "hit"       # B-NO gets its own entry
+    assert s.query(q, optimize=False).cache.status == "hit"
+    assert r_no.ids == r_opt.ids            # (and both are correct)
+
+
+def test_plan_cache_memoizes_compilation(cached_session):
+    s = cached_session
+    q = query_pool(s.lake)[2]
+    c1 = s.compile(q, top=10)
+    assert s.compile(q, top=10) is c1             # memoized by content
+    assert s.compile(q, top=7) is not c1          # top is part of the key
+    sql = q.to_sql()
+    assert s.compile(sql) is s.compile(sql)
+
+
+def test_legacy_plan_queries_share_cache_entries(cached_session):
+    s = cached_session
+    t = s.lake.tables[6]
+    plan = Plan()
+    plan.add("a", Seekers.SC(list(t.columns[0][:6]), k=20))
+    plan.add("b", Seekers.KW([t.columns[1][0]], k=20))
+    plan.add("out", Combiners.Union(k=10), ["a", "b"])
+    r1 = s.query(plan)
+    flipped = Plan()
+    flipped.add("b", Seekers.KW([t.columns[1][0]], k=20))
+    flipped.add("a", Seekers.SC(list(t.columns[0][:6]), k=20))
+    flipped.add("out", Combiners.Union(k=10), ["b", "a"])
+    r2 = s.query(flipped)
+    assert r2.cache.status == "hit" and r2.ids == r1.ids
+
+
+# --------------------------------------------------------------------------
+# epoch invalidation (mutations never serve stale ids)
+# --------------------------------------------------------------------------
+
+def rebuild_ids(session, tables_by_tid, q):
+    """Expected ids from a cold from-scratch rebuild of the live tables,
+    mapped back to the session's stable table ids."""
+    live = session.live.live_ids()
+    ref = blend.Session(Executor(build_index(
+        DataLake([tables_by_tid[t] for t in live]))))
+    return [live[i] for i in ref.query(q).ids]
+
+
+def test_mutation_invalidation_bit_identical_to_cold_rebuild():
+    """Acceptance: the mutation-invalidation workload returns bit-identical
+    table ids to a cold rebuild after every add/drop/compact."""
+    lake = cache_lake(seed=21)
+    s = blend.connect(lake, live=True, cache=True)
+    tbl = dict(enumerate(lake.tables))
+    pool = query_pool(lake)
+    for q in pool:
+        s.query(q)
+    assert all(s.query(q).cache.status == "hit" for q in pool)
+
+    t0 = extra_table(0)
+    tbl[s.add_table(t0)] = t0
+    r = s.query(pool[0])
+    assert r.cache.status != "hit"                 # epoch moved: invalidated
+    for q in pool:
+        assert s.query(q).ids == rebuild_ids(s, tbl, q)
+
+    victim = s.query(pool[0]).ids[0]
+    s.drop_table(victim)
+    del tbl[victim]
+    for q in pool:
+        ids = s.query(q).ids
+        assert victim not in ids                   # never a stale id
+        assert ids == rebuild_ids(s, tbl, q)
+
+    s.compact()
+    for q in pool:
+        assert s.query(q).ids == rebuild_ids(s, tbl, q)
+    assert s.cache.invalidations >= 3
+
+
+def test_interleaved_queries_and_mutations_match_cold_session():
+    """Deterministic interleaving (the hypothesis property below, runnable
+    without hypothesis): cached and cold sessions over the same store agree
+    at every epoch."""
+    lake = cache_lake(seed=31, n_tables=10)
+    ll = LiveLake(lake)
+    cached = blend.connect(ll, live=True, cache=True)
+    cold = blend.connect(ll, live=True)
+    pool = query_pool(lake, k=12)
+    script = ["q0", "q1", "add", "q0", "q2", "drop", "q0", "q3", "compact",
+              "q1", "q0", "add", "q3", "q3"]
+    n_added = 0
+    for step in script:
+        if step == "add":
+            cached.add_table(extra_table(10 + n_added))
+            n_added += 1
+        elif step == "drop":
+            cached.drop_table(sorted(ll.live_ids())[0])
+        elif step == "compact":
+            cached.compact()
+        else:
+            q = pool[int(step[1:])]
+            assert cached.query(q).ids == cold.query(q).ids, step
+    st_ = cached.cache.stats()
+    assert st_["hits"] > 0 and st_["invalidations"] > 0
+
+
+@settings(max_examples=5, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow,
+                                 HealthCheck.data_too_large])
+@given(st.lists(st.tuples(st.sampled_from(["query", "add", "drop",
+                                           "compact"]),
+                          st.integers(0, 10 ** 6)),
+                min_size=2, max_size=8))
+def test_property_cache_parity_under_random_interleaving(ops):
+    """Property: ANY interleaving of queries and LiveLake mutations yields
+    identical results with the cache enabled vs a cold engine at every
+    epoch."""
+    lake = cache_lake(seed=41, n_tables=10)
+    ll = LiveLake(lake)
+    cached = blend.connect(ll, live=True, cache=True)
+    cold = blend.connect(ll, live=True)
+    pool = query_pool(lake, k=12)
+    for i, (op, arg) in enumerate(ops):
+        if op == "add":
+            cached.add_table(extra_table(50 + arg % 40, rows=6 + arg % 9))
+        elif op == "drop" and len(ll.live_ids()) > 4:
+            live = sorted(ll.live_ids())
+            cached.drop_table(live[arg % len(live)])
+        elif op == "compact":
+            cached.compact(full=arg % 2 == 0)
+        else:
+            q = pool[arg % len(pool)]
+            assert cached.query(q).ids == cold.query(q).ids, (i, op)
+    for q in pool:                                  # final epoch, full pool
+        assert cached.query(q).ids == cold.query(q).ids
+
+
+# --------------------------------------------------------------------------
+# LRU byte budget
+# --------------------------------------------------------------------------
+
+def test_shared_cache_keys_on_executor_config_and_cost_model():
+    """Entries produced under one executor configuration or cost model are
+    never served to a session running another (different capacity ladders /
+    seeker rankings are different computations)."""
+    from repro.core.cost_model import train_cost_model
+    lake = cache_lake(seed=101, n_tables=8)
+    ll = LiveLake(lake)
+    qc = QueryCache()
+    q = query_pool(lake, k=8)[0]
+    s1 = blend.connect(ll, live=True, cache=qc)
+    s1.query(q)
+    assert s1.query(q).cache.status == "hit"
+    s2 = blend.connect(ll, live=True, cache=qc, m_cap_max=64)
+    r = s2.query(q)                       # same store+epoch, other ladder
+    assert r.cache.status != "hit"
+    assert r.ids == blend.connect(ll, live=True, m_cap_max=64).query(q).ids
+    # swapping the cost model reorders execution groups: entries invalidate
+    s2.query(q)
+    assert s2.query(q).cache.status == "hit"
+    s2.cost_model = train_cost_model(s2.executor, lake, n_samples=4)
+    assert s2.query(q).cache.status != "hit"
+
+
+def test_lru_eviction_under_byte_budget():
+    lake = cache_lake(seed=51)
+    # budget fits only a couple of entries per level
+    s = blend.connect(lake, cache=QueryCache(max_bytes=2000))
+    pool = query_pool(lake)
+    for q in pool:
+        s.query(q)
+    assert s.cache.resident_bytes <= 2000
+    assert s.cache.evictions > 0
+    for q in pool:                  # correctness survives any eviction state
+        cold = blend.connect(lake)
+        assert s.query(q).ids == cold.query(q).ids
+
+
+def test_oversized_entries_are_refused_not_evicting_everything():
+    cache = QueryCache(max_bytes=1000)            # 500 bytes per level
+    cache.put_seeker("big", object(), 0, n_tables=10 ** 6)
+    assert len(cache.seekers) == 0 and cache.seekers.bytes == 0
+    cache.put_seeker("ok", object(), 0, n_tables=1)
+    assert len(cache.seekers) == 1
+
+
+def test_connect_cache_argument_forms():
+    lake = cache_lake(seed=61, n_tables=6)
+    assert blend.connect(lake).cache is None
+    assert isinstance(blend.connect(lake, cache=True).cache, QueryCache)
+    s = blend.connect(lake, cache=1 << 16)
+    assert s.cache.results.max_bytes + s.cache.seekers.max_bytes == 1 << 16
+    qc = QueryCache()
+    assert blend.connect(lake, cache=qc).cache is qc
+
+
+# --------------------------------------------------------------------------
+# serving integration: telemetry + drain accounting
+# --------------------------------------------------------------------------
+
+def test_discovery_engine_cache_telemetry_and_drain_exclusion():
+    lake = cache_lake(seed=71)
+    eng = DiscoveryEngine(lake, cache=True)
+    pool = query_pool(lake)
+    cold = eng.serve(pool[0])
+    assert cold.cache is not None and cold.cache["status"] != "hit"
+    hit = eng.serve(pool[0])
+    assert hit.cache["status"] == "hit" and hit.table_ids == cold.table_ids
+
+    # batch: warmed requests are zero-dispatch; the one cold request pays
+    # the drain, the hits do not
+    batch = eng.serve_many([pool[0], pool[0], pool[1]])
+    assert batch[0].cache["status"] == "hit"
+    assert batch[1].cache["status"] == "hit"
+    assert batch[2].cache["status"] != "hit"
+    assert batch[0].table_ids == batch[1].table_ids == cold.table_ids
+    assert max(batch[0].seconds, batch[1].seconds) < batch[2].seconds
+    # fully-warmed batch: nothing dispatches, everything still answers
+    first = eng.serve_many(pool)
+    again = eng.serve_many(pool)
+    assert all(b.cache["status"] == "hit" for b in again)
+    assert [b.table_ids for b in again] == [b.table_ids for b in first]
+
+    with pytest.raises(ValueError, match="cache"):
+        DiscoveryEngine(lake, session=eng.session, cache=True)
+
+
+def test_sync_false_hit_does_not_block_and_batch_dup_is_served():
+    """serve_many([q, q]) on a cold cache: the duplicate hits the entry the
+    first request stored moments earlier (still undrained) — the hit must
+    not sync inside the dispatch loop, and both answers must agree."""
+    lake = cache_lake(seed=91)
+    eng = DiscoveryEngine(lake, cache=True)
+    q = query_pool(lake)[0]
+    r1, r2 = eng.serve_many([q, q])
+    assert r2.cache["status"] == "hit"
+    assert r1.table_ids == r2.table_ids
+    assert r2.seconds < r1.seconds          # no drain share, no hidden sync
+    # the lazily-materialized ids were written back into the entry
+    s = eng.session
+    entry = s.cache.get_result(s.cache.result_key(s.compile(q).plan, True))
+    assert entry.ids == r1.table_ids
+
+
+def test_drain_exclusion_predicate():
+    class R:
+        def __init__(self, cache):
+            self.cache = cache
+
+    class C:
+        def __init__(self, status, runs):
+            self.status, self.seekers_run = status, runs
+
+    assert DiscoveryEngine._dispatched(R(None))                 # cache off
+    assert DiscoveryEngine._dispatched(R(C("miss", 2)))
+    assert DiscoveryEngine._dispatched(R(C("partial", 1)))
+    assert not DiscoveryEngine._dispatched(R(C("hit", 0)))
+    # all seekers cached but the combiners still enqueued device work:
+    # the request keeps its drain share
+    assert DiscoveryEngine._dispatched(R(C("partial", 0)))
+
+
+def test_explain_renders_cache_section(cached_session):
+    s = cached_session
+    q = query_pool(s.lake)[3]
+    s.query(q)
+    ex = s.explain(q)
+    assert ex.cache and ex.cache["status"] == "hit"
+    text = str(ex)
+    assert "== cache ==" in text and "status: hit" in text
+    # cache off: no section
+    off = blend.connect(s.lake)
+    t2 = str(off.explain(blend.kw(["tok_1"], k=5)))
+    assert "== cache ==" not in t2
+
+
+def test_repeat_query_latency_much_faster_than_cold(cached_session):
+    """Supports the BENCH_4 acceptance: repeat-query p50 is far below cold
+    p50 (asserted loosely here; the full 10x criterion is measured on the
+    benchmark lake by benchmarks/run_all.py)."""
+    import time
+    s = cached_session
+    q = query_pool(s.lake)[2]          # 3-seeker counter query
+    s.query(q)                         # warm jit + cache
+
+    def p50(fn, n=15):
+        ts = []
+        for _ in range(n):
+            t0 = time.perf_counter()
+            fn()
+            ts.append(time.perf_counter() - t0)
+        return float(np.percentile(ts, 50))
+
+    hit = p50(lambda: s.query(q).ids)
+    assert s.query(q).cache.status == "hit"
+
+    def cold():
+        s.cache.clear()
+        return s.query(q).ids
+
+    miss = p50(cold)
+    s.cache.clear()
+    assert miss / hit >= 3, (miss, hit)
