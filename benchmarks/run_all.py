@@ -10,6 +10,9 @@ mutation workloads (``mutate/add_table_p50``, ``mutate/compact``,
 query-cache workloads: repeat-query hits vs cold serving (acceptance:
 >= 10x p50), partial hits over a shared subtree, unique-query miss
 overhead, batched warm serving, and the mutation-invalidation cycle.
+``BENCH_5.json`` records the fused-execution workloads: deep-DAG plan
+latency fused vs unfused (acceptance: >= 3x p50, launches <= n_kinds + 1)
+and 12-request ``serve_many`` throughput (>= 2x).
 
     PYTHONPATH=src python benchmarks/run_all.py [--out PATH] [--full]
 
@@ -241,6 +244,46 @@ def cache_workloads(lake, iters: int = 10) -> dict:
     return workloads
 
 
+def fused_workloads(lake, iters: int = 10) -> dict:
+    """Fused-execution workloads (BENCH_5): deep-DAG plan latency fused vs
+    unfused, batched serve_many throughput, and the launch counts that
+    explain the difference.  Cold here means cold *query cache* (none is
+    attached) with a warm jit cache — the steady serving state."""
+    from examples.fused_serving import deep_query
+
+    session = blend.connect(lake)
+    engine = DiscoveryEngine(lake, session=session)
+    q = deep_query(lake)
+
+    workloads = {}
+    unf = _measure(lambda: session.query(q).ids, iters=iters)
+    fus = _measure(lambda: session.query(q, fused=True).ids, iters=iters)
+    n_unf = session.query(q).info.launches
+    n_fus = session.query(q, fused=True).info.launches
+    assert session.query(q, fused=True).ids == session.query(q).ids
+    unf["launches"] = n_unf
+    fus["launches"] = n_fus
+    fus["speedup_vs_unfused"] = unf["p50_ms"] / fus["p50_ms"]
+    workloads["fused/deep_dag_unfused"] = unf
+    workloads["fused/deep_dag_fused"] = fus
+
+    reqs = [deep_query(lake, tab) for tab in range(12)]
+    engine.serve_many(reqs)                       # warm every program
+    engine.serve_many(reqs, fused=True)
+    unf = _measure(lambda: engine.serve_many(reqs), warmup=1,
+                   iters=max(iters // 2, 3))
+    fus = _measure(lambda: engine.serve_many(reqs, fused=True), warmup=1,
+                   iters=max(iters // 2, 3))
+    resp = engine.serve_many(reqs, fused=True)
+    unf["requests_per_sec"] = unf["ops_per_sec"] * len(reqs)
+    fus["requests_per_sec"] = fus["ops_per_sec"] * len(reqs)
+    fus["speedup_vs_unfused"] = unf["p50_ms"] / fus["p50_ms"]
+    fus["launches_per_request"] = max(r.launches for r in resp)
+    workloads["serve/batch12_deep_unfused"] = unf
+    workloads["serve/batch12_deep_fused"] = fus
+    return workloads
+
+
 def main(out_path: Path, full: bool = False, iters: int = 10) -> dict:
     rng = np.random.default_rng(7)
     lake = synthetic_lake(n_tables=200, rows=40, vocab=1500, seed=1)
@@ -334,10 +377,24 @@ def main(out_path: Path, full: bool = False, iters: int = 10) -> dict:
         json.dumps(cache_payload, indent=2, sort_keys=True) + "\n")
     print(f"wrote {cache_path}")
 
-    for name, s in {**workloads, **live, **cache}.items():
+    fused = fused_workloads(lake, iters=iters)
+    fused_payload = {
+        "bench": "BENCH_5",
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "lake": lake.stats(),
+        "workloads": fused,
+    }
+    fused_path = out_path.parent / "BENCH_5.json"
+    fused_path.write_text(
+        json.dumps(fused_payload, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {fused_path}")
+
+    for name, s in {**workloads, **live, **cache, **fused}.items():
         extra = "".join(
             f" ({s[key]:.0f}x vs {key.rsplit('_', 1)[-1]})"
-            for key in ("speedup_vs_rebuild", "speedup_vs_cold")
+            for key in ("speedup_vs_rebuild", "speedup_vs_cold",
+                        "speedup_vs_unfused")
             if key in s)
         print(f"{name:32s} {s['ops_per_sec']:10.1f} ops/s "
               f"p50={s['p50_ms']:.2f}ms p95={s['p95_ms']:.2f}ms{extra}")

@@ -20,9 +20,10 @@ class ResultSet:
     mask: jnp.ndarray            # bool [n_tables]
 
     def ids(self):
-        """Selected table ids sorted by score desc (host-side)."""
-        s = np.asarray(self.scores)
-        m = np.asarray(self.mask)
+        """Selected table ids sorted by score desc (host-side; scores and
+        mask come back in a single device transfer)."""
+        s, m = (np.asarray(a) for a in
+                jax.device_get((self.scores, self.mask)))
         ids = np.nonzero(m)[0]
         return ids[np.argsort(-s[ids], kind="stable")]
 

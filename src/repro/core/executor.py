@@ -41,6 +41,17 @@ PAD_SENTINEL = MISSING                    # reserved: never a real cell hash
 
 
 @dataclass
+class OverflowSlice:
+    """A lazy view into a fused group's stacked overflow vector: ``rows``
+    are this plan's seekers' rows in ``vec``.  Materializing the slice at
+    dispatch time would cost one tiny device gather per seeker; deferring
+    it to the ``ExecInfo.overflow`` read keeps the fused dispatch path free
+    of per-node device ops."""
+    vec: object                   # [n_seekers_p] device overflow vector
+    rows: list                    # this plan's row indices into vec
+
+
+@dataclass
 class ExecInfo:
     optimized: bool
     node_seconds: dict = field(default_factory=dict)
@@ -54,6 +65,12 @@ class ExecInfo:
     # seeker runs, so it keeps its share.
     cached_nodes: list = field(default_factory=list)
     seeker_runs: int = 0
+    # device-program dispatch count: every jitted seeker call (compaction
+    # stages included) and every combiner node counts one on the unfused
+    # path; the fused path counts its group launches + the single DAG
+    # program — ``n_groups + 1``, which is ``n_kinds + 1`` unless same-kind
+    # seekers differ in static shape args (MC n_cols, C h/sampling)
+    launches: int = 0
 
     @property
     def total_seconds(self) -> float:
@@ -61,8 +78,19 @@ class ExecInfo:
 
     @property
     def overflow(self) -> int:
-        # reading this synchronizes on the dispatched seekers
-        return int(sum(int(np.asarray(p)) for p in self.overflow_parts))
+        # reading this synchronizes on the dispatched seekers; all parts are
+        # fetched in ONE device transfer (a part may be a per-seeker scalar
+        # or a fused group's stacked OverflowSlice)
+        if not self.overflow_parts:
+            return 0
+        raw = jax.device_get([p.vec if isinstance(p, OverflowSlice) else p
+                              for p in self.overflow_parts])
+        total = 0
+        for p, r in zip(self.overflow_parts, raw):
+            a = np.asarray(r)
+            total += int(a[p.rows].sum() if isinstance(p, OverflowSlice)
+                         else a.sum())
+        return total
 
 
 def _pow2_at_least(n: int, lo: int = 8, hi: int = 1024) -> int:
@@ -133,12 +161,15 @@ class Executor:
     def _hash_many(self, values) -> np.ndarray:
         """Memoized value hashing (shared across queries / plans).  The memo
         is bounded: a long-lived serving executor seeing an unbounded stream
-        of distinct values resets it instead of growing forever."""
+        of distinct values evicts the oldest half (dict insertion order)
+        instead of wiping everything — a full clear stampedes every hot
+        value through a re-hash on the next request."""
         vals = list(values)
         out = np.empty(len(vals), np.uint32)
         cache = self._hash_cache
         if len(cache) > self._hash_cache_max:
-            cache.clear()
+            for k in list(cache)[:len(cache) // 2]:
+                del cache[k]
         for i, v in enumerate(vals):
             h = cache.get(v)
             if h is None:
@@ -199,6 +230,7 @@ class Executor:
                    sync: bool = True) -> comb.ResultSet:
         if not self._in_plan:   # a running plan already pinned its epoch
             self.refresh()
+        self._last_launches = 1
         if spec.kind in ("SC", "KW"):
             h = self._hashed(spec.values)
             m_cap = self._mcap_for(h)
@@ -236,6 +268,7 @@ class Executor:
                 # stage-2 validation runs with compacted candidate buffers
                 # (this is where the threaded 'WHERE TableId IN (IR)'
                 # actually shrinks work)
+                self._last_launches = 2
                 surv = seek.mc_survivor_counts(*args, m_cap=m_cap,
                                                allowed=allowed,
                                                tuple_mask=jnp.asarray(tmask))
@@ -266,6 +299,7 @@ class Executor:
                       row_stride=self.index.row_stride, allowed=allowed)
             if allowed is not None and sync:
                 # two-stage: compact the join side to the surviving postings
+                self._last_launches = 2
                 surv = int(seek.c_survivor_counts(self.engine, qh, qm,
                                                   m_cap=m_cap,
                                                   allowed=allowed))
@@ -287,19 +321,52 @@ class Executor:
     # ------------------------------------------------------------------ plan
     def run(self, plan: Plan, optimize: bool = True,
             cost_model: CostModel | None = None, sync: bool = True,
-            cache=None):
+            cache=None, fused: bool = False):
         """Execute ``plan``.  ``cache`` is an optional query-cache handle
         (duck-typed ``seeker_key``/``get_seeker``/``put_seeker`` — see
         serve/cache.py): unrestricted seeker runs are served from and stored
         into its subplan level, short-circuiting ``run_seeker``.  Seekers
         that would run under a threaded optimizer mask still execute, so a
-        partially-cached plan is bit-identical to a cold run."""
+        partially-cached plan is bit-identical to a cold run.
+
+        ``fused=True`` routes through core/fused.py: all same-kind seekers
+        dispatch as one batched device program and the combiner DAG compiles
+        to a single jitted program, so the plan executes in
+        ``~n_kinds + 1`` launches (``ExecInfo.launches``) instead of one
+        per node — bit-identical to the unfused walk."""
         self.refresh()          # one consistent epoch for the whole plan
         self._in_plan = True    # nested run_seeker calls must not re-refresh
         try:
+            if fused:
+                from repro.core.fused import run_fused
+                rs, info = run_fused(self, [plan], optimize=optimize,
+                                     cost_model=cost_model, cache=cache)[0]
+                if sync:
+                    rs.scores.block_until_ready()
+                return rs, info
             return self._run(plan, optimize, cost_model, sync, cache)
         finally:
             self._in_plan = False
+
+    def run_many(self, plans, optimize: bool = True,
+                 cost_model: CostModel | None = None, sync: bool = True,
+                 cache=None):
+        """Fused batch execution: same-kind seekers are batched *across all
+        plans* into shared device launches (serve/engine.py ``serve_many``'s
+        fused mode).  Returns [(ResultSet, ExecInfo)] aligned with
+        ``plans``; with ``sync=False`` nothing synchronizes — the caller
+        drains the device once."""
+        from repro.core.fused import run_fused
+        self.refresh()
+        self._in_plan = True
+        try:
+            out = run_fused(self, list(plans), optimize=optimize,
+                            cost_model=cost_model, cache=cache)
+        finally:
+            self._in_plan = False
+        if sync:
+            jax.block_until_ready([rs.scores for rs, _ in out])
+        return out
 
     def _run(self, plan: Plan, optimize: bool, cost_model, sync: bool,
              cache=None):
@@ -322,6 +389,7 @@ class Executor:
             else:
                 rs = self.run_seeker(spec, allowed=allowed, sync=sync)
                 info.seeker_runs += 1
+                info.launches += self._last_launches
                 info.overflow_parts.append(self._last_overflow)
                 if key is not None:
                     cache.put_seeker(key, rs, self._last_overflow,
@@ -359,6 +427,7 @@ class Executor:
                     rs = comb.difference(a, b, k)
                     info.node_seconds[name] = time.perf_counter() - t0
                     info.order.append(name)
+                    info.launches += 1
                 else:
                     deps = [eval_node(d) for d in node.deps]
                     t0 = time.perf_counter()
@@ -372,6 +441,7 @@ class Executor:
                         raise ValueError(kind)
                     info.node_seconds[name] = time.perf_counter() - t0
                     info.order.append(name)
+                    info.launches += 1
             memo[name] = rs
             return rs
 
@@ -403,4 +473,5 @@ class Executor:
         rs = comb.intersect(results, combiner_node.spec.k)
         info.node_seconds[combiner_node.name] = time.perf_counter() - t0
         info.order.append(combiner_node.name)
+        info.launches += 1
         return rs

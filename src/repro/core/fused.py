@@ -1,0 +1,497 @@
+"""Fused plan execution: batched same-kind seeker dispatch + whole-DAG
+device compilation.
+
+The unfused executor pays one device program per seeker node (two for the
+compaction stages) plus a Python re-entry between every combiner — on deep
+discovery DAGs launch overhead, not probe work, dominates warm-path latency.
+The fused path collapses a plan (or a whole ``serve_many`` batch) to
+``n_kinds + 1`` launches:
+
+1. **Batched seeker dispatch** — all same-kind seekers, across every plan in
+   the batch, are concatenated into one padded query array with per-row
+   seeker ids and per-row (ladder-quantized) capacities, probed once through
+   ``MatchEngine.probe_capped`` and grouped-by into a stacked
+   ``[n_seekers, n_tables]`` score matrix (seekers.py ``*_seeker_seg``).
+   Capacity lookups batch into ONE ``host_counts`` call over every seeker's
+   hashes.
+2. **Whole-DAG device compilation** — the post-seeker combiner DAG
+   (top-k / intersect / union / difference / counter / optimizer mask
+   threading) is elementwise over ``[n_tables]`` vectors, so the entire DAG
+   lowers to one jitted program keyed on the (static, hashable) instruction
+   list derived from the plan topology.  Zero intermediate host syncs.
+
+Bit-identity with the unfused executor rests on two invariants:
+
+* per-seeker probe windows under ``probe_capped`` hold exactly the postings
+  a dedicated launch at that seeker's capacity would hold, and every seeker
+  score is a sum / max of 0-or-1 float contributions (or a QCR ratio of such
+  sums), so the stacked rows equal the dedicated launches bit-for-bit;
+* a seeker run under the optimizer's threaded ``allowed`` mask equals
+  ``where(allowed, unrestricted_scores, 0)`` followed by the same top-k —
+  the mask is constant per table and is ANDed into contributions *before* a
+  per-table group-by — so mask threading moves into the DAG program, where
+  the masks live on device, and the batched seekers all run unrestricted.
+
+Query-cache composition: seekers served from the subplan cache drop out of
+the batch entirely — their cached (scores, mask) vectors are fed to the DAG
+program as extra inputs.  As in the unfused path, only unrestricted runs are
+served from or stored into the cache, so partial hits stay bit-identical to
+a cold run.
+
+Retrace-freedom: the batch query width, the tuple-block width, the seeker
+count and the shared capacity window are all quantized onto power-of-two /
+capacity ladders, and the DAG program is keyed on plan topology — re-running
+any plan shape with new values of the same buckets is zero-trace
+(``seekers.TRACE_COUNTS``-asserted in tests/test_fused.py).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import seekers as seek
+from repro.core.combiners import ResultSet
+from repro.core.executor import (ExecInfo, OverflowSlice, PAD_SENTINEL,
+                                 _pow2_at_least)
+from repro.core.hashing import row_superkey, split_u64
+from repro.core.optimizer import optimize as optimize_plan
+
+
+@dataclass
+class _Task:
+    """One pending (unrestricted) seeker dispatch in the fused batch."""
+    plan_idx: int
+    name: str
+    spec: object
+    instr_idx: int                    # its placeholder slot in the plan prog
+    # hashed query payload (filled by _hash_tasks)
+    h: np.ndarray | None = None      # SC/KW/C: hashed values
+    qbit: np.ndarray | None = None   # C: k0/k1 split bits
+    th: np.ndarray | None = None     # MC: [nt, n_cols] hashed tuples
+    init_col: np.ndarray | None = None
+    qk_lo: np.ndarray | None = None
+    qk_hi: np.ndarray | None = None
+    nt: int = 0                      # MC: deduped tuple count
+    m_cap: int = 0                   # this seeker's capacity-ladder rung
+    group_key: tuple = ()
+    row: int = -1                    # row in the group's stacked output
+    head: object = None              # canonical task for this spec: dupes
+    #                                  share its hashes, batch row and scores
+
+
+@dataclass
+class _PlanProg:
+    """A plan compiled to a linear DAG program + its pending seeker batch."""
+    instrs: list = field(default_factory=list)
+    order: list = field(default_factory=list)        # ExecInfo.order parity
+    tasks: list = field(default_factory=list)        # _Task, traversal order
+    cached: list = field(default_factory=list)       # CachedSeeker hits
+    cached_names: list = field(default_factory=list)
+    cache_puts: list = field(default_factory=list)   # (key, reg, task)
+    out_reg: int = 0
+
+
+def _group_key(spec) -> tuple:
+    """Seekers sharing a key share one device program: the kind plus every
+    per-seeker *static* argument of its segmented kernel."""
+    if spec.kind == "MC":
+        return ("MC", spec.n_cols)
+    if spec.kind == "C":
+        return ("C", spec.h, spec.sampling)
+    return (spec.kind,)
+
+
+# --------------------------------------------------------------------------
+# plan -> linear DAG program (mirrors Executor._run's traversal exactly,
+# including the memoization, EG mask threading, the difference-subtrahend
+# rewrite and the subplan-cache consultation order)
+# --------------------------------------------------------------------------
+
+def _compile_plan(plan, optimize, ep, cache, plan_idx) -> _PlanProg:
+    pr = _PlanProg()
+    reg_of: dict[str, int] = {}
+
+    def emit(ins) -> int:
+        pr.instrs.append(ins)
+        return len(pr.instrs) - 1
+
+    def seeker_node(name, spec, allowed_reg) -> int:
+        # mirrors timed_seeker: cache serves/stores unrestricted runs only
+        key = cache.seeker_key(spec) \
+            if cache is not None and allowed_reg is None else None
+        if key is not None:
+            hit = cache.get_seeker(key)
+            if hit is not None:
+                reg = emit(("cached", len(pr.cached)))
+                pr.cached.append(hit)
+                pr.cached_names.append(name)
+                pr.order.append(name)
+                return reg
+        task = _Task(plan_idx=plan_idx, name=name, spec=spec,
+                     instr_idx=len(pr.instrs))
+        # the task's ordinal within the plan is stable across batch
+        # compositions; its batch row is resolved through the traced
+        # ``rows`` vector at run time, so reshuffled batches reuse the
+        # compiled DAG program
+        reg = emit(("seeker", None, len(pr.tasks), spec.k,
+                    -1 if allowed_reg is None else allowed_reg))
+        pr.tasks.append(task)
+        if key is not None:
+            pr.cache_puts.append((key, reg, task))
+        pr.order.append(name)
+        return reg
+
+    def run_group(eg, combiner_node) -> int:
+        results = []
+        allowed = None
+        for sname in eg.seekers:
+            if sname in reg_of:
+                r = reg_of[sname]
+            else:
+                exclusive = len(plan.consumers(sname)) == 1
+                r = seeker_node(sname, plan.nodes[sname].spec,
+                                allowed if exclusive else None)
+                reg_of[sname] = r
+            results.append(r)
+            allowed = r if allowed is None else emit(("maskand", allowed, r))
+        for dep in combiner_node.deps:
+            if dep not in eg.seekers:
+                results.append(eval_node(dep))
+        reg = emit(("intersect", tuple(results), combiner_node.spec.k))
+        pr.order.append(combiner_node.name)
+        return reg
+
+    def eval_node(name: str) -> int:
+        if name in reg_of:
+            return reg_of[name]
+        node = plan.nodes[name]
+        if node.is_seeker:
+            reg = seeker_node(name, node.spec, None)
+        else:
+            kind = node.spec.kind
+            k = node.spec.k
+            if optimize and ep is not None and name in ep.groups:
+                reg = run_group(ep.groups[name], node)
+            elif kind == "difference":
+                a = eval_node(node.deps[0])
+                b_node = plan.nodes[node.deps[1]]
+                if optimize and b_node.is_seeker and \
+                        len(plan.consumers(b_node.name)) == 1 and \
+                        b_node.name not in reg_of:
+                    b = seeker_node(b_node.name, b_node.spec, a)
+                    reg_of[b_node.name] = b
+                else:
+                    b = eval_node(node.deps[1])
+                reg = emit(("difference", a, b, k))
+                pr.order.append(name)
+            else:
+                deps = tuple(eval_node(d) for d in node.deps)
+                reg = emit((kind, deps, k))
+                pr.order.append(name)
+        reg_of[name] = reg
+        return reg
+
+    pr.out_reg = eval_node(plan.output)
+    return pr
+
+
+# --------------------------------------------------------------------------
+# batched hashing + ONE host_counts call for every capacity pick
+# --------------------------------------------------------------------------
+
+def _hash_tasks(ex, tasks):
+    """Hash every pending seeker's query values (through the executor's
+    memoized value-hash cache) and pick every capacity from one batched
+    ``host_counts`` lookup over the concatenated hash arrays."""
+    reqs = []
+    for t in tasks:
+        spec = t.spec
+        if spec.kind in ("SC", "KW"):
+            t.h = ex._hashed(spec.values)
+            reqs.append(t.h)
+        elif spec.kind == "C":
+            pairs = list(dict.fromkeys(zip(spec.values, spec.target)))
+            t.h = ex._hash_many([p[0] for p in pairs])
+            tgt = np.array([float(p[1]) for p in pairs])
+            t.qbit = (tgt >= tgt.mean()).astype(np.int8) if len(tgt) \
+                else np.zeros(0, np.int8)
+            reqs.append(t.h)
+        else:                                       # MC
+            values = list(dict.fromkeys(spec.values))
+            t.nt = len(values)
+            n_cols = spec.n_cols
+            t.th = np.stack([ex._hash_many([v[c] for v in values])
+                             for c in range(n_cols)], axis=1) if values \
+                else np.zeros((0, n_cols), np.uint32)
+            qks = np.array([row_superkey(t.th[i], np.zeros(n_cols, np.int64))
+                            for i in range(t.nt)], np.uint64)
+            t.qk_lo, t.qk_hi = split_u64(qks)
+            reqs.append(t.th.reshape(-1))
+    if not tasks:
+        return
+    lens = np.array([len(r) for r in reqs], np.int64)
+    offs = np.concatenate([[0], np.cumsum(lens)])
+    all_h = np.concatenate(reqs) if offs[-1] else np.zeros(0, np.uint32)
+    counts = ex.index.host_counts(all_h)
+    for i, t in enumerate(tasks):
+        c = counts[offs[i]:offs[i + 1]]
+        if t.spec.kind == "MC":
+            cm = c.reshape(t.nt, t.spec.n_cols) if t.nt \
+                else np.zeros((0, t.spec.n_cols), np.int64)
+            t.init_col = np.argmin(cm, axis=1).astype(np.int32) if t.nt \
+                else np.zeros(0, np.int32)
+            t.m_cap = ex._quantize_cap(int(cm.max(initial=1)))
+        else:
+            t.m_cap = ex._quantize_cap(int(c.max(initial=1)))
+
+
+# --------------------------------------------------------------------------
+# group batch assembly + launch
+# --------------------------------------------------------------------------
+
+def _pow2(n: int, lo: int) -> int:
+    return _pow2_at_least(max(n, 1), lo=lo, hi=1 << 30)
+
+
+def _launch_group(ex, key, tasks):
+    """Dispatch one seeker group as a single device program.  Returns
+    (scores [n_seekers_p, n_tables], overflow [n_seekers_p]) — both lazy.
+    ``tasks`` are the deduped head tasks of the group (run_fused collapses
+    identical specs before hashing)."""
+    for i, t in enumerate(tasks):
+        t.row = i
+    eng = ex.engine
+    kind = key[0]
+    nsp = _pow2(len(tasks), lo=1)
+    m_cap = max(t.m_cap for t in tasks)
+    if kind == "MC":
+        n_cols = key[1]
+        total = sum(t.nt for t in tasks)
+        width = _pow2(total, lo=8)
+        th = np.zeros((width, n_cols), np.uint32)
+        init = np.zeros(width, np.int32)
+        qlo = np.zeros(width, np.uint32)
+        qhi = np.zeros(width, np.uint32)
+        seg = np.zeros(width, np.int32)
+        caps = np.zeros(width, np.int32)
+        tmask = np.zeros(width, bool)
+        off = 0
+        for i, t in enumerate(tasks):
+            n = t.nt
+            th[off:off + n] = t.th
+            init[off:off + n] = t.init_col
+            qlo[off:off + n] = t.qk_lo
+            qhi[off:off + n] = t.qk_hi
+            seg[off:off + n] = i
+            caps[off:off + n] = t.m_cap
+            tmask[off:off + n] = True
+            off += n
+        # numpy operands go straight into the jitted call: jit's own
+        # device_put of the whole operand list is much cheaper than
+        # per-array jnp.asarray round-trips on the hot path
+        return seek.mc_seeker_seg(
+            eng, th, init, qlo, qhi, seg, caps,
+            m_cap=m_cap, n_seekers=nsp, n_tables=ex.n_tables, n_cols=n_cols,
+            row_stride=ex.index.row_stride, tuple_mask=tmask)
+    total = sum(len(t.h) for t in tasks)
+    width = _pow2(total, lo=16)
+    qh = np.full(width, PAD_SENTINEL, np.uint32)
+    qm = np.zeros(width, bool)
+    seg = np.zeros(width, np.int32)
+    caps = np.zeros(width, np.int32)
+    qb = np.zeros(width, np.int8)
+    off = 0
+    for i, t in enumerate(tasks):
+        n = len(t.h)
+        qh[off:off + n] = t.h
+        qm[off:off + n] = True
+        seg[off:off + n] = i
+        caps[off:off + n] = t.m_cap
+        if kind == "C":
+            qb[off:off + n] = t.qbit
+        off += n
+    if kind == "SC":
+        return seek.sc_seeker_seg(eng, qh, qm, seg, caps, m_cap=m_cap,
+                                  n_seekers=nsp, n_tables=ex.n_tables,
+                                  max_cols=ex.max_cols)
+    if kind == "KW":
+        return seek.kw_seeker_seg(eng, qh, qm, seg, caps, m_cap=m_cap,
+                                  n_seekers=nsp, n_tables=ex.n_tables)
+    return seek.c_seeker_seg(eng, qh, qm, qb, seg, caps, m_cap=m_cap,
+                             row_cap=ex.row_cap, n_seekers=nsp,
+                             n_tables=ex.n_tables, max_cols=ex.max_cols,
+                             h_sample=key[1], sampling=key[2],
+                             row_stride=ex.index.row_stride)
+
+
+# --------------------------------------------------------------------------
+# the whole-DAG device program
+# --------------------------------------------------------------------------
+
+def _topk(scores, k: int):
+    """Mirrors combiners.topk_result on raw (scores, mask) pairs."""
+    k = min(k, scores.shape[0])
+    vals, ids = jax.lax.top_k(scores, k)
+    keep = vals > 0
+    mask = jnp.zeros(scores.shape[0], bool).at[ids].set(keep)
+    return jnp.where(mask, scores, 0.0), mask
+
+
+def _maybe_topk(scores, mask, k):
+    """Mirrors combiners._maybe_topk: ``k=None`` keeps the combiner's own
+    mask (no cut) — the same contract legacy cut-free plans rely on."""
+    scores = jnp.where(mask, scores, 0.0)
+    if k is None:
+        return scores, mask
+    return _topk(scores, k)
+
+
+@functools.partial(jax.jit, static_argnames=("prog",))
+def _run_dag(group_scores, rows, cached_scores, cached_masks, *, prog):
+    """Execute one plan's compiled instruction list in a single device
+    program.  ``group_scores`` is the tuple of stacked seeker score matrices
+    this plan consumes and ``rows`` the traced vector mapping each seeker
+    ordinal to its batch row — traced so a reshuffled serve_many batch of
+    the same plan shapes reuses the compiled program.  Every op mirrors its
+    combiners.py counterpart exactly (same op order, same top-k), so
+    outputs are bit-identical to the node-at-a-time walk."""
+    seek._mark_trace("DAG")
+    regs = []
+    for ins in prog:
+        op = ins[0]
+        if op == "seeker":
+            _, gi, j, k, allowed = ins
+            s = group_scores[gi][rows[j]]
+            if allowed >= 0:
+                s = jnp.where(regs[allowed][1], s, 0.0)
+            regs.append(_topk(s, k))
+        elif op == "cached":
+            regs.append((cached_scores[ins[1]], cached_masks[ins[1]]))
+        elif op == "maskand":
+            regs.append((regs[ins[1]][0], regs[ins[1]][1] & regs[ins[2]][1]))
+        elif op == "intersect":
+            _, deps, k = ins
+            scores, mask = regs[deps[0]]
+            for d in deps[1:]:
+                mask = mask & regs[d][1]
+                scores = scores + regs[d][0]
+            regs.append(_maybe_topk(scores, mask, k))
+        elif op == "union":
+            _, deps, k = ins
+            scores, mask = regs[deps[0]]
+            for d in deps[1:]:
+                mask = mask | regs[d][1]
+                scores = jnp.maximum(scores, regs[d][0])
+            regs.append(_maybe_topk(scores, mask, k))
+        elif op == "difference":
+            _, a, b, k = ins
+            mask = regs[a][1] & ~regs[b][1]
+            regs.append(_maybe_topk(regs[a][0], mask, k))
+        elif op == "counter":
+            _, deps, k = ins
+            counts = jnp.zeros_like(regs[deps[0]][0])
+            for d in deps:
+                counts = counts + regs[d][1].astype(jnp.float32)
+            regs.append(_maybe_topk(counts, counts > 0, k))
+        else:
+            raise ValueError(op)
+    return tuple(regs)
+
+
+# --------------------------------------------------------------------------
+# driver
+# --------------------------------------------------------------------------
+
+def run_fused(ex, plans, optimize=True, cost_model=None, cache=None):
+    """Execute ``plans`` (one or a whole serve_many batch) on the fused
+    path; returns [(ResultSet, ExecInfo)] aligned with ``plans``.  The
+    caller (Executor.run / Executor.run_many) owns engine refresh and the
+    final drain."""
+    eps = [optimize_plan(p, ex.seeker_stats, cost_model) if optimize
+           else None for p in plans]
+    progs = [_compile_plan(p, optimize, e, cache, i)
+             for i, (p, e) in enumerate(zip(plans, eps))]
+
+    tasks = [t for pr in progs for t in pr.tasks]
+    # identical seekers (same frozen spec — e.g. a hot subtree shared
+    # across a serve_many batch, where per-request cache lookups all happen
+    # before any put) collapse onto one head task BEFORE hashing: same spec
+    # means same hashes, capacity rung and scores, so dupes share the
+    # head's batch row and pay no host work
+    heads: dict = {}
+    for t in tasks:
+        t.head = heads.setdefault(t.spec, t)
+    _hash_tasks(ex, list(heads.values()))
+
+    groups: dict[tuple, list] = {}
+    for h in heads.values():
+        h.group_key = _group_key(h.spec)
+        groups.setdefault(h.group_key, []).append(h)
+    group_out: dict[tuple, tuple] = {}
+    launch_seconds: dict[tuple, float] = {}
+    for key in sorted(groups):
+        t0 = time.perf_counter()
+        group_out[key] = _launch_group(ex, key, groups[key])
+        launch_seconds[key] = time.perf_counter() - t0
+    group_plans: dict[tuple, set] = {}
+    for t in tasks:                    # dupes adopt their head's placement
+        t.group_key = t.head.group_key
+        t.row = t.head.row
+        group_plans.setdefault(t.group_key, set()).add(t.plan_idx)
+
+    out = []
+    for pr, plan in zip(progs, plans):
+        plan_keys = sorted({t.group_key for t in pr.tasks})
+        key_idx = {k: i for i, k in enumerate(plan_keys)}
+        for t in pr.tasks:
+            ins = pr.instrs[t.instr_idx]
+            pr.instrs[t.instr_idx] = ("seeker", key_idx[t.group_key],
+                                      ins[2], ins[3], ins[4])
+        rows = np.array([t.row for t in pr.tasks], np.int32)
+        gs = tuple(group_out[k][0] for k in plan_keys)
+        if pr.cached:
+            cs = jnp.stack([c.result.scores for c in pr.cached])
+            cm = jnp.stack([c.result.mask for c in pr.cached])
+        else:
+            cs = jnp.zeros((0, ex.n_tables), jnp.float32)
+            cm = jnp.zeros((0, ex.n_tables), bool)
+        t0 = time.perf_counter()
+        regs = _run_dag(gs, rows, cs, cm, prog=tuple(pr.instrs))
+        dag_s = time.perf_counter() - t0
+
+        info = ExecInfo(optimized=optimize)
+        info.order = pr.order
+        info.cached_nodes = pr.cached_names
+        info.seeker_runs = len(pr.tasks)
+        # one launch per seeker group + the DAG program; groups == kinds
+        # unless same-kind seekers differ in static shape args (MC n_cols,
+        # C h/sampling), each of which is its own device program
+        info.launches = len(plan_keys) + 1
+        info.node_seconds["fused:dag"] = dag_s
+        for key in plan_keys:
+            # a serve_many group launch is shared across plans; attribute an
+            # equal share so per-request node_seconds stay additive (+= so
+            # two same-kind groups, e.g. MC n_cols=2 and n_cols=3, don't
+            # overwrite each other)
+            name = "fused:" + "/".join(str(p) for p in key)
+            info.node_seconds[name] = info.node_seconds.get(name, 0.0) + \
+                launch_seconds[key] / len(group_plans[key])
+        info.overflow_parts.extend(c.overflow for c in pr.cached)
+        for key in plan_keys:
+            rows = [t.row for t in pr.tasks if t.group_key == key]
+            info.overflow_parts.append(OverflowSlice(group_out[key][1],
+                                                     rows))
+        if cache is not None:
+            for ckey, reg, task in pr.cache_puts:
+                cache.put_seeker(ckey, ResultSet(scores=regs[reg][0],
+                                                 mask=regs[reg][1]),
+                                 group_out[task.group_key][1][task.row],
+                                 ex.n_tables)
+        out.append((ResultSet(scores=regs[pr.out_reg][0],
+                              mask=regs[pr.out_reg][1]), info))
+    return out

@@ -84,6 +84,28 @@ def probe_sorted_bounded(sorted_keys, n_real: int, queries, q_mask, cap):
     return pidx, valid, overflow
 
 
+def probe_sorted_capped(sorted_keys, n_real: int, queries, q_mask, cap,
+                        row_caps):
+    """``probe_sorted_bounded`` with *per-row* match capacities.
+
+    The fused executor (core/fused.py) batches seekers with different
+    (ladder-quantized) capacities into one launch: ``cap`` is the static
+    window width (the group maximum) while ``row_caps[i] <= cap`` restricts
+    row ``i`` to its own seeker's capacity, so per-seeker scores and
+    overflow stay bit-identical to a dedicated launch at that capacity.
+    Overflow is returned per row (callers segment-sum it by seeker)."""
+    lo = jnp.minimum(jnp.searchsorted(sorted_keys, queries, side="left"),
+                     n_real)
+    hi = jnp.minimum(jnp.searchsorted(sorted_keys, queries, side="right"),
+                     n_real)
+    lane = jnp.arange(cap)[None, :]
+    pidx = lo[:, None] + lane
+    valid = (pidx < hi[:, None]) & (lane < row_caps[:, None]) & q_mask[:, None]
+    pidx = jnp.clip(pidx, 0, sorted_keys.shape[0] - 1)
+    ovf_rows = jnp.where(q_mask, jnp.maximum(hi - lo - row_caps, 0), 0)
+    return pidx, valid, ovf_rows
+
+
 def sorted_member(sorted_keys, queries):
     """Batched membership: sorted_keys [B, M] row-sorted, queries [B, C] ->
     bool [B, C] (the MC validation join primitive)."""
@@ -258,6 +280,55 @@ class MatchEngine:
         if self.alive is not None:
             valid &= self.alive[self.dev["table"][pidx]]
         return pidx, valid, ovf
+
+    def _probe_segment_capped(self, i: int, q_hash, q_mask, m_cap: int,
+                              row_caps):
+        """``_probe_segment`` with per-row capacities (fused batching)."""
+        start, length, n_real = self.config.seg_bounds[i]
+        if self.config.backend == "sorted":
+            keys = self.dev["hash"][start:start + length]
+            pidx, valid, ovf = probe_sorted_capped(keys, n_real, q_hash,
+                                                   q_mask, m_cap, row_caps)
+            return pidx + start, valid, ovf
+        nq = q_hash.shape[0]
+        q_block = min(256, nq)
+        hits = bucket_ops.probe(self.bucket_hashes[i], self.bucket_payload[i],
+                                q_hash, self.config.bucket_bits,
+                                use_kernel=True,
+                                interpret=self.config.interpret,
+                                q_block=q_block)
+        hit = hits >= 0
+        count = jnp.sum(hit, axis=1)
+        n = self.dev["hash"].shape[0]
+        base = jnp.min(jnp.where(hit, hits, n), axis=1)
+        lane = jnp.arange(m_cap)[None, :]
+        pidx = base[:, None] + lane
+        valid = (lane < count[:, None]) & (lane < row_caps[:, None]) & \
+            q_mask[:, None]
+        pidx = jnp.clip(pidx, 0, n - 1)
+        ovf_rows = jnp.where(q_mask, jnp.maximum(count - row_caps, 0), 0)
+        return pidx, valid, ovf_rows
+
+    def probe_capped(self, q_hash, q_mask, m_cap: int, row_caps):
+        """``probe`` with per-row match capacities: the fused executor
+        concatenates several seekers' padded query arrays into one batch and
+        probes them in a single launch; ``row_caps`` carries each row's own
+        (ladder-quantized) capacity so every seeker sees exactly the match
+        window its dedicated launch would have seen.  Returns per-row
+        overflow instead of a batch total, so callers can segment-sum it
+        back into per-seeker overflow counters."""
+        parts = [self._probe_segment_capped(i, q_hash, q_mask, m_cap,
+                                            row_caps)
+                 for i in range(len(self.config.seg_bounds))]
+        if len(parts) == 1:
+            pidx, valid, ovf_rows = parts[0]
+        else:
+            pidx = jnp.concatenate([p for p, _, _ in parts], axis=1)
+            valid = jnp.concatenate([v for _, v, _ in parts], axis=1)
+            ovf_rows = sum(o for _, _, o in parts)
+        if self.alive is not None:
+            valid &= self.alive[self.dev["table"][pidx]]
+        return pidx, valid, ovf_rows
 
     def rowjoin(self, rowkeys, mask, row_cap: int):
         """Numeric-postings window per candidate rowkey: (nidx, nvalid),

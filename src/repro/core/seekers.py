@@ -152,6 +152,151 @@ def mc_seeker(engine, tuple_hashes, init_col, qk_lo, qk_hi, *, m_cap,
 
 
 # --------------------------------------------------------------------------
+# Segmented (fused-batch) seeker variants — core/fused.py dispatches all
+# same-kind seekers of a plan (or of a whole serve_many batch) as ONE device
+# program: the padded query arrays are concatenated with per-row seeker ids
+# (``seg_id``) and per-row match capacities (``row_caps``, each seeker's own
+# ladder rung), probing goes through ``MatchEngine.probe_capped``, and the
+# group-by keys are prefixed with the seeker id so one scatter produces a
+# stacked [n_seekers, n_tables] score matrix.  Per-seeker contributions are
+# exactly the ones a dedicated launch would have produced (same valid
+# windows, same 0/1 integer sums), so each row of the stack is bit-identical
+# to the unfused seeker's output.  ``n_seekers`` is quantized to a power of
+# two by the caller so the batch stays retrace-free.
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("m_cap", "n_seekers", "n_tables",
+                                             "max_cols"))
+def sc_seeker_seg(engine, q_hash, q_mask, seg_id, row_caps, *, m_cap,
+                  n_seekers, n_tables, max_cols):
+    """Batched ``sc_seeker``: one probe over the concatenated query rows,
+    one group-by into [n_seekers, n_tables].  Returns (scores, overflow
+    [n_seekers])."""
+    _mark_trace("SC_seg")
+    idx = engine.dev
+    pidx, valid, ovf_rows = engine.probe_capped(q_hash, q_mask, m_cap,
+                                                row_caps)
+    t = idx["table"][pidx]
+    c = idx["col"][pidx]
+    contrib = valid & _first_occurrence(t, c, valid=valid)
+    flat = ((seg_id[:, None] * n_tables + t) * max_cols + c).reshape(-1)
+    scores = jnp.zeros(n_seekers * n_tables * max_cols, jnp.float32).at[
+        flat].add(contrib.reshape(-1).astype(jnp.float32), mode="drop")
+    ovf = jnp.zeros(n_seekers, ovf_rows.dtype).at[seg_id].add(ovf_rows,
+                                                              mode="drop")
+    return scores.reshape(n_seekers, n_tables, max_cols).max(axis=2), ovf
+
+
+@functools.partial(jax.jit, static_argnames=("m_cap", "n_seekers",
+                                             "n_tables"))
+def kw_seeker_seg(engine, q_hash, q_mask, seg_id, row_caps, *, m_cap,
+                  n_seekers, n_tables):
+    """Batched ``kw_seeker`` (SC without the ColumnId group key)."""
+    _mark_trace("KW_seg")
+    idx = engine.dev
+    pidx, valid, ovf_rows = engine.probe_capped(q_hash, q_mask, m_cap,
+                                                row_caps)
+    t = idx["table"][pidx]
+    contrib = valid & _first_occurrence(t, valid=valid)
+    flat = (seg_id[:, None] * n_tables + t).reshape(-1)
+    scores = jnp.zeros(n_seekers * n_tables, jnp.float32).at[flat].add(
+        contrib.reshape(-1).astype(jnp.float32), mode="drop")
+    ovf = jnp.zeros(n_seekers, ovf_rows.dtype).at[seg_id].add(ovf_rows,
+                                                              mode="drop")
+    return scores.reshape(n_seekers, n_tables), ovf
+
+
+@functools.partial(jax.jit, static_argnames=("m_cap", "n_seekers", "n_tables",
+                                             "n_cols", "use_superkey",
+                                             "row_stride"))
+def mc_seeker_seg(engine, tuple_hashes, init_col, qk_lo, qk_hi, seg_id,
+                  row_caps, *, m_cap, n_seekers, n_tables, n_cols,
+                  row_stride=1 << 22, use_superkey=True, tuple_mask=None):
+    """Batched ``mc_seeker`` over the concatenated tuple blocks of all
+    same-width (``n_cols``) MC seekers; ``seg_id`` is per tuple.  The
+    matched-tuple counts are segment-summed by seeker after the per-tuple
+    dedupe, so each stacked row equals the dedicated launch's scores."""
+    _mark_trace("MC_seg")
+    idx = engine.dev
+    nt = tuple_hashes.shape[0]
+    h0 = jnp.take_along_axis(tuple_hashes, init_col[:, None], 1)[:, 0]
+    q_mask = _tuple_mask_or_ones(tuple_mask, nt)
+    pidx, valid, ovf_rows = engine.probe_capped(h0, q_mask, m_cap, row_caps)
+    t = idx["table"][pidx]
+    r = idx["row"][pidx]
+    if use_superkey:
+        valid &= engine.bloom(pidx, qk_lo, qk_hi)
+    rowkey = t.astype(jnp.int32) * row_stride + r.astype(jnp.int32)
+
+    ok = valid
+    for j in range(n_cols):                       # static, small
+        hj = tuple_hashes[:, j]
+        pj, vj, _ = engine.probe_capped(hj, q_mask, m_cap, row_caps)
+        tj = idx["table"][pj]
+        rj = idx["row"][pj]
+        rkj = tj.astype(jnp.int32) * row_stride + rj.astype(jnp.int32)
+        rkj = jnp.where(vj, rkj, -1)
+        member = jnp.any(rowkey[:, :, None] == rkj[:, None, :], axis=-1)
+        ok &= member | (init_col == j)[:, None]
+    per_tt = jnp.zeros((nt * n_tables,), jnp.float32).at[
+        (jnp.arange(nt)[:, None] * n_tables + t).reshape(-1)].max(
+        ok.reshape(-1).astype(jnp.float32), mode="drop")
+    scores = jnp.zeros((n_seekers, n_tables), jnp.float32).at[seg_id].add(
+        per_tt.reshape(nt, n_tables), mode="drop")
+    ovf = jnp.zeros(n_seekers, ovf_rows.dtype).at[seg_id].add(ovf_rows,
+                                                              mode="drop")
+    return scores, ovf
+
+
+@functools.partial(jax.jit, static_argnames=("m_cap", "row_cap", "n_seekers",
+                                             "n_tables", "max_cols",
+                                             "h_sample", "sampling",
+                                             "min_support", "row_stride"))
+def c_seeker_seg(engine, qj_hash, q_mask, q_bit, seg_id, row_caps, *, m_cap,
+                 row_cap, n_seekers, n_tables, max_cols, h_sample,
+                 row_stride=1 << 22, sampling="conv", min_support=3):
+    """Batched ``c_seeker``: the QCR group-by key is prefixed with the
+    seeker id of the originating join posting, so the per-(table, join_col,
+    num_col) segment sums — and hence every QCR ratio — are computed from
+    exactly the contributions the dedicated launch would have seen."""
+    _mark_trace("C_seg")
+    idx = engine.dev
+    pidx, valid, ovf_rows = engine.probe_capped(qj_hash, q_mask, m_cap,
+                                                row_caps)
+    t = idx["table"][pidx]
+    r = idx["row"][pidx]
+    cj = idx["col"][pidx]
+    rowkey = t.astype(jnp.int32) * row_stride + r.astype(jnp.int32)
+    rk_flat = rowkey.reshape(-1)
+
+    nidx, nvalid = engine.rowjoin(rk_flat, valid.reshape(-1), row_cap)
+
+    ntab = idx["num_table"][nidx]
+    ncol = idx["num_col"][nidx]
+    nquad = idx["num_quadrant"][nidx]
+    rank = idx["num_rank_conv" if sampling == "conv" else "num_rank_rand"][nidx]
+    nvalid &= rank < h_sample
+
+    qb = jnp.broadcast_to(q_bit[:, None], pidx.shape).reshape(-1)[:, None]
+    agree = (nquad == qb) & nvalid
+
+    segf = jnp.broadcast_to(seg_id[:, None], pidx.shape).reshape(-1)
+    dim = n_tables * max_cols * max_cols
+    key = segf[:, None] * dim + \
+        (ntab * max_cols + cj.reshape(-1)[:, None]) * max_cols + ncol
+    key = key.reshape(-1)
+    n_all = jnp.zeros(n_seekers * dim, jnp.float32).at[key].add(
+        nvalid.reshape(-1).astype(jnp.float32), mode="drop")
+    n_agree = jnp.zeros(n_seekers * dim, jnp.float32).at[key].add(
+        agree.reshape(-1).astype(jnp.float32), mode="drop")
+    qcr = engine.qcr(n_agree, n_all, min_support)
+    ovf = jnp.zeros(n_seekers, ovf_rows.dtype).at[seg_id].add(ovf_rows,
+                                                              mode="drop")
+    return qcr.reshape(n_seekers, n_tables, max_cols * max_cols).max(axis=2), \
+        ovf
+
+
+# --------------------------------------------------------------------------
 # MC capacity compaction — the TPU analogue of the paper's query rewriting.
 # The threaded predicate can't shrink a static-shape scan by itself; instead
 # the executor measures the survivor count (stage 1) and re-launches the
@@ -309,8 +454,12 @@ def c_seeker_compact(engine, qj_hash, q_mask, q_bit, *, m_cap, cap2, row_cap,
     cj = idx["col"][pidx]
     qb = jnp.broadcast_to(q_bit[:, None], pidx.shape)
     flat_valid = valid.reshape(-1)
-    (keep,) = jnp.nonzero(flat_valid, size=cap2, fill_value=0)
-    kv = flat_valid[keep]
+    # fill_value must be out-of-band: filling with slot 0 would mark the pad
+    # entries valid whenever slot 0 itself survives, double-counting its
+    # postings cap2-surv times in the QCR segment sums
+    (keep,) = jnp.nonzero(flat_valid, size=cap2, fill_value=-1)
+    kv = keep >= 0
+    keep = jnp.where(kv, keep, 0)
     rk = jnp.where(kv, rowkey.reshape(-1)[keep], -1)
     cjf = cj.reshape(-1)[keep]
     qbf = qb.reshape(-1)[keep]

@@ -82,6 +82,7 @@ class Explain:
     node_seconds: dict
     overflow: int
     ids: list
+    launches: int = 0                 # device-program dispatches (ExecInfo)
     index_shape: dict = field(default_factory=dict)   # live-lake observability
     cache: dict = field(default_factory=dict)         # query-cache telemetry
 
@@ -122,6 +123,7 @@ class Explain:
                 if name in self.node_seconds:
                     lines.append(f"  {name:<14s} "
                                  f"{self.node_seconds[name]*1e3:8.2f} ms")
+            lines.append(f"  launches: {self.launches}")
             lines.append(f"  overflow: {self.overflow}")
             lines.append(f"  top tables: {list(self.ids)[:10]}")
         return "\n".join(lines)
@@ -235,7 +237,7 @@ class Session:
 
     # ---------------------------------------------------------------- execute
     def query(self, q, top: int | None = None, optimize: bool = True,
-              sync: bool = True) -> QueryResult:
+              sync: bool = True, fused: bool = False) -> QueryResult:
         """Compile + execute; ``top`` overrides/sets the root result limit.
 
         With the query cache enabled (``connect(lake, cache=True)``) the
@@ -243,35 +245,52 @@ class Session:
         key, then served from the exact-result cache when the canonical plan
         fingerprint matches; otherwise the executor runs with the subplan
         cache, which short-circuits unrestricted seeker runs (a 'partial'
-        hit).  Results are bit-identical to a cold run in every case."""
+        hit).  Results are bit-identical to a cold run in every case.
+
+        ``fused=True`` executes on the fused path (core/fused.py): batched
+        same-kind seeker dispatch + a single whole-DAG device program,
+        ``ExecInfo.launches <= n_kinds + 1`` — bit-identical results."""
         compiled = q if isinstance(q, Compiled) else self.compile(q, top=top)
         cache = self.cache
         t0 = time.perf_counter()
         if cache is None:
             rs, info = self.executor.run(compiled.plan, optimize=optimize,
                                          cost_model=self.cost_model,
-                                         sync=sync)
+                                         sync=sync, fused=fused)
             return QueryResult(result=rs, info=info, compiled=compiled,
                                seconds=time.perf_counter() - t0)
         cache.begin(self.executor.index, self._cache_config())
         rkey = cache.result_key(compiled.plan, optimize)
         entry = cache.get_result(rkey)
         if entry is not None:
-            cache.note("hit")
-            # ids materialize through the lazy property (written back into
-            # the entry): a sync=False hit on an entry stored earlier in the
-            # same undrained batch must not block the dispatch loop
-            if sync and entry.ids is None:
-                entry.ids = [int(t) for t in entry.result.ids()]
-            cinfo = cache.request_info("hit")
-            return QueryResult(result=entry.result, info=entry.info,
-                               compiled=compiled,
-                               seconds=time.perf_counter() - t0,
-                               _ids=entry.ids, cache=cinfo, _entry=entry)
-        from repro.serve.cache import CachedResult   # lazy: avoids a cycle
+            return self._hit_result(entry, compiled, sync,
+                                    time.perf_counter() - t0)
         rs, info = self.executor.run(compiled.plan, optimize=optimize,
                                      cost_model=self.cost_model, sync=sync,
-                                     cache=cache)
+                                     cache=cache, fused=fused)
+        return self._record_result(rkey, rs, info, compiled,
+                                   time.perf_counter() - t0)
+
+    def _hit_result(self, entry, compiled, sync, seconds) -> QueryResult:
+        """Serve one exact-result cache hit (shared by query/query_many)."""
+        cache = self.cache
+        cache.note("hit")
+        # ids materialize through the lazy property (written back into
+        # the entry): a sync=False hit on an entry stored earlier in the
+        # same undrained batch must not block the dispatch loop
+        if sync and entry.ids is None:
+            entry.ids = [int(t) for t in entry.result.ids()]
+        return QueryResult(result=entry.result, info=entry.info,
+                           compiled=compiled, seconds=seconds,
+                           _ids=entry.ids, cache=cache.request_info("hit"),
+                           _entry=entry)
+
+    def _record_result(self, rkey, rs, info, compiled,
+                       seconds) -> QueryResult:
+        """Store one executed result into the cache and wrap it (shared by
+        query/query_many)."""
+        cache = self.cache
+        from repro.serve.cache import CachedResult   # lazy: avoids a cycle
         cache.put_result(rkey, CachedResult(result=rs, info=info,
                                             plan_nodes=len(
                                                 compiled.plan.nodes)),
@@ -282,19 +301,75 @@ class Session:
                                    seekers_cached=len(info.cached_nodes),
                                    seekers_run=info.seeker_runs)
         return QueryResult(result=rs, info=info, compiled=compiled,
-                           seconds=time.perf_counter() - t0, cache=cinfo)
+                           seconds=seconds, cache=cinfo)
 
     def sql(self, text: str, optimize: bool = True,
             sync: bool = True) -> QueryResult:
         """Execute one BlendQL statement."""
         return self.query(text, optimize=optimize, sync=sync)
 
+    def query_many(self, queries, top: int | None = None,
+                   optimize: bool = True, sync: bool = True,
+                   fused: bool = True) -> list:
+        """Execute a batch of queries; with ``fused=True`` (the default)
+        same-kind seekers are batched *across all requests* into shared
+        device launches (``Executor.run_many``), so a heterogeneous batch
+        executes in about one launch per seeker kind plus one tiny DAG
+        program per request.  Query-cache semantics match ``query``:
+        exact-result hits short-circuit before the executor, subplan hits
+        drop their seekers out of the fused batch, and every result is
+        bit-identical to a sequential cold run.
+
+        Each result's ``seconds`` is its own compile/lookup time plus an
+        equal share of the batch's host-side dispatch (exact hits pay no
+        share)."""
+        cache = self.cache
+        if cache is not None:
+            cache.begin(self.executor.index, self._cache_config())
+        results: list = [None] * len(queries)
+        pending: list = []                     # (index, Compiled, result key)
+        for i, q in enumerate(queries):
+            t0 = time.perf_counter()
+            comp = q if isinstance(q, Compiled) else self.compile(q, top=top)
+            if cache is None:
+                pending.append((i, comp, None, time.perf_counter() - t0))
+                continue
+            rkey = cache.result_key(comp.plan, optimize)
+            entry = cache.get_result(rkey)
+            if entry is not None:
+                results[i] = self._hit_result(entry, comp, sync,
+                                              time.perf_counter() - t0)
+            else:
+                pending.append((i, comp, rkey, time.perf_counter() - t0))
+        if not pending:
+            return results
+        if not fused:
+            for i, comp, _, _ in pending:
+                results[i] = self.query(comp, optimize=optimize, sync=sync)
+            return results
+        t0 = time.perf_counter()
+        outs = self.executor.run_many([c.plan for _, c, _, _ in pending],
+                                      optimize=optimize,
+                                      cost_model=self.cost_model, sync=sync,
+                                      cache=cache)
+        share = (time.perf_counter() - t0) / len(pending)
+        for (i, comp, rkey, own_s), (rs, info) in zip(pending, outs):
+            if cache is not None:
+                results[i] = self._record_result(rkey, rs, info, comp,
+                                                 own_s + share)
+            else:
+                results[i] = QueryResult(result=rs, info=info, compiled=comp,
+                                         seconds=own_s + share)
+        return results
+
     # ---------------------------------------------------------------- explain
     def explain(self, q, top: int | None = None, optimize: bool = True,
-                execute: bool = True) -> Explain:
+                execute: bool = True, fused: bool = False) -> Explain:
         """Compile (and by default run) ``q``; returns the full transcript:
         rendered logical tree, applied rewrite rules, ranked physical order,
-        and per-node timings from the actual execution."""
+        and per-node timings from the actual execution.  ``fused=True``
+        executes on the fused path — the transcript's ``launches`` line then
+        shows the collapsed dispatch count (<= n_kinds + 1)."""
         compiled = q if isinstance(q, Compiled) else self.compile(q, top=top)
         if compiled.logical is not None:
             tree = compiled.logical.render()
@@ -311,7 +386,7 @@ class Session:
         ids: list = []
         cache_info: dict = {}
         if execute:
-            res = self.query(compiled, optimize=optimize)
+            res = self.query(compiled, optimize=optimize, fused=fused)
             info, ids = res.info, res.ids
             if res.cache is not None:
                 cache_info = res.cache.as_dict()
@@ -320,6 +395,7 @@ class Session:
                        physical_order=ranked, exec_order=list(info.order),
                        node_seconds=dict(info.node_seconds),
                        overflow=info.overflow if execute else 0, ids=ids,
+                       launches=info.launches,
                        index_shape=self.index_shape(), cache=cache_info)
 
 

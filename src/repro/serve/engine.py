@@ -48,6 +48,9 @@ class DiscoveryResponse:
     node_seconds: dict = field(default_factory=dict)
     order: list = field(default_factory=list)
     overflow: int = 0
+    # device-program dispatches this request cost (ExecInfo.launches): the
+    # fused path's observable win — ~n_kinds + 1 per plan vs one per node
+    launches: int = 0
     applied_rules: list = field(default_factory=list)
     # query-cache telemetry (serve/cache.py CacheInfo.as_dict()): status
     # hit/partial/miss, seekers served vs run, resident entries/bytes,
@@ -133,12 +136,14 @@ class DiscoveryEngine:
                                  node_seconds=dict(res.info.node_seconds),
                                  order=list(res.info.order),
                                  overflow=res.info.overflow,
+                                 launches=res.info.launches,
                                  applied_rules=list(res.applied_rules),
                                  cache=res.cache.as_dict()
                                  if res.cache is not None else None)
 
-    def serve(self, query, optimize: bool = True) -> DiscoveryResponse:
-        res = self.session.query(query, optimize=optimize)
+    def serve(self, query, optimize: bool = True,
+              fused: bool = False) -> DiscoveryResponse:
+        res = self.session.query(query, optimize=optimize, fused=fused)
         return self._response(res, res.seconds)
 
     @staticmethod
@@ -149,12 +154,23 @@ class DiscoveryEngine:
         the subplan cache, so it keeps its drain share."""
         return res.cache is None or res.cache.status != "hit"
 
-    def serve_many(self, queries, optimize: bool = True):
+    def serve_many(self, queries, optimize: bool = True,
+                   fused: bool = False):
         """Batched serving: every seeker of every request is dispatched
         without host synchronization (no per-seeker ``block_until_ready``, no
         data-dependent compaction stages), value hashing is deduped across
         requests through the executor's hash cache, and the device is drained
         exactly once before the responses are materialized.
+
+        With ``fused=True`` the batch additionally routes through
+        ``Session.query_many``: same-kind seekers *across all requests* are
+        concatenated into one device program per kind and each request's
+        combiner DAG runs as a single jitted program, so a 12-request batch
+        costs about ``n_kinds`` shared launches plus 12 tiny DAG programs.
+        ``DiscoveryResponse.launches`` is each request's *own* program
+        count (~n_kinds + 1); a shared group launch counts once per request
+        using it, so summing launches across a batch overstates the actual
+        dispatch total — it is a per-request bound, not an additive share.
 
         ``seconds`` is that request's own compile+dispatch (trace/enqueue)
         time plus an equal share of the single device drain — device time
@@ -163,11 +179,16 @@ class DiscoveryEngine:
         dispatched device work: an exact query-cache hit enqueued nothing,
         so it pays no drain share and its reported latency stays honest."""
         session = self.session
-        pending = []
-        for q in queries:
-            t0 = time.perf_counter()
-            res = session.query(q, optimize=optimize, sync=False)
-            pending.append((res, time.perf_counter() - t0))
+        if fused:
+            pending = [(res, res.seconds) for res in
+                       session.query_many(queries, optimize=optimize,
+                                          sync=False, fused=True)]
+        else:
+            pending = []
+            for q in queries:
+                t0 = time.perf_counter()
+                res = session.query(q, optimize=optimize, sync=False)
+                pending.append((res, time.perf_counter() - t0))
         hot = [res for res, _ in pending if self._dispatched(res)]
         t0 = time.perf_counter()
         jax.block_until_ready([res.scores for res in hot])

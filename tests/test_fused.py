@@ -1,0 +1,409 @@
+"""Fused execution: bit-identical parity with the unfused executor across
+all four seekers and combiners on both probe backends and both store kinds,
+oracle conformance, retrace-freedom within capacity buckets, query-cache
+composition (cached seekers drop out of the fused batch), launch-count
+observability, and a hypothesis property over random DAGs.
+
+Ground truth is the unfused walk (itself anchored to tests/oracle.py): the
+fused path's contract is *bit-identity*, so every assertion here is exact
+array equality, never approximate.
+"""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+import blend
+from repro.core import seekers as seek
+from repro.core.executor import Executor
+from repro.core.index import build_index
+from repro.core.lake import Table, synthetic_lake
+from repro.core.plan import Combiners, Plan, Seekers
+from repro.query import logical as L
+from repro.serve.engine import DiscoveryEngine
+from repro.store import LiveLake
+
+from oracle import oracle_ids, oracle_run
+
+N_TABLES = 24
+
+
+@pytest.fixture(scope="module")
+def lake():
+    return synthetic_lake(n_tables=N_TABLES, rows=16, cols=4, vocab=300,
+                          seed=11)
+
+
+@pytest.fixture(scope="module")
+def mutated_live(lake):
+    """A live store with a delta segment and a tombstone (the fused path
+    must fan out over segments and respect tombstones exactly)."""
+    ll = LiveLake(lake, auto_compact=False)
+    t = lake.tables[2]
+    ll.add_table(Table("fx_extra", [[f"fx{i}" for i in range(10)],
+                                    [t.columns[0][0]] * 10,
+                                    [float(i) for i in range(10)]]))
+    ll.drop_table(3)
+    return ll
+
+
+def seekers_for(lake, tab=2, k=12):
+    t = lake.tables[tab]
+    return {
+        "sc": Seekers.SC(t.columns[0][:6], k=k),
+        "kw": Seekers.KW([t.columns[1][0], t.columns[1][1]], k=k),
+        "mc": Seekers.MC([(t.columns[0][r], t.columns[1][r])
+                          for r in range(4)], k=k),
+        "c": Seekers.Correlation(t.columns[0][:6],
+                                 [float(i) for i in range(6)], k=k, h=64),
+    }
+
+
+def flat_plan(lake, comb, tab=2):
+    """All four seekers feeding one combiner (difference nests two)."""
+    p = Plan()
+    for name, spec in seekers_for(lake, tab).items():
+        p.add(name, spec)
+    if comb == "difference":
+        p.add("ab", Combiners.Intersect(k=16), ["sc", "kw"])
+        p.add("cd", Combiners.Union(k=16), ["mc", "c"])
+        p.add("root", Combiners.Difference(k=8), ["ab", "cd"])
+    else:
+        p.add("root", getattr(Combiners, comb.capitalize())(k=8),
+              ["sc", "kw", "mc", "c"])
+    return p
+
+
+def deep_plan(lake, tab=2):
+    """Every combiner kind + a shared seeker + a seeker-subtrahend rewrite
+    in one DAG — the worst case for the instruction compiler."""
+    p = Plan()
+    for name, spec in seekers_for(lake, tab).items():
+        p.add(name, spec)
+    p.add("kw2", Seekers.KW([lake.tables[tab].columns[2][0]], k=12))
+    p.add("and1", Combiners.Intersect(k=16), ["sc", "kw", "mc"])
+    p.add("or1", Combiners.Union(k=16), ["sc", "c"])       # shares sc
+    p.add("cnt", Combiners.Counter(k=16), ["and1", "or1"])
+    p.add("root", Combiners.Difference(k=8), ["cnt", "kw2"])
+    return p
+
+
+def assert_bit_identical(ex, plan, optimize=True):
+    a, ia = ex.run(plan, optimize=optimize)
+    b, ib = ex.run(plan, optimize=optimize, fused=True)
+    np.testing.assert_array_equal(np.asarray(a.scores), np.asarray(b.scores))
+    np.testing.assert_array_equal(np.asarray(a.mask), np.asarray(b.mask))
+    assert ia.overflow == ib.overflow
+    assert ia.order == ib.order
+    return ia, ib
+
+
+# --------------------------------------------------------------------------
+# parity: 4 seekers x 4 combiners, optimized + naive, both store kinds
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("optimize", [True, False])
+@pytest.mark.parametrize("comb", ["intersect", "union", "counter",
+                                  "difference"])
+def test_fused_parity_sorted_static(lake, comb, optimize):
+    ex = Executor(build_index(lake))
+    ia, ib = assert_bit_identical(ex, flat_plan(lake, comb), optimize)
+    assert ib.launches <= 4 + 1                 # n_kinds + 1
+    assert ib.launches < ia.launches or ia.launches <= ib.launches == 5
+
+
+@pytest.mark.parametrize("comb", ["intersect", "union", "counter",
+                                  "difference"])
+def test_fused_parity_sorted_live(lake, mutated_live, comb):
+    ex = Executor(mutated_live.store)
+    assert_bit_identical(ex, flat_plan(lake, comb))
+
+
+@pytest.mark.parametrize("live", [False, True])
+def test_fused_parity_bucket_backend(lake, mutated_live, live):
+    idx = mutated_live.store if live else build_index(lake)
+    ex = Executor(idx, backend="bucket", interpret=True)
+    for optimize in (True, False):
+        assert_bit_identical(ex, deep_plan(lake), optimize)
+
+
+def test_fused_deep_dag_parity_and_launches(lake):
+    ex = Executor(build_index(lake))
+    ia, ib = assert_bit_identical(ex, deep_plan(lake))
+    # 4 seeker kinds (sc+kw+kw2 share two groups: SC, KW, MC, C) + 1 DAG
+    assert ib.launches <= 4 + 1
+    assert ia.launches > ib.launches
+
+
+def test_fused_same_kind_multiple_groups(lake):
+    """Same-kind seekers with different static shape args (MC n_cols) are
+    separate device programs: launches = n_groups + 1 and each group keeps
+    its own node_seconds entry."""
+    t = lake.tables[2]
+    p = Plan()
+    p.add("mc2", Seekers.MC([(t.columns[0][r], t.columns[1][r])
+                             for r in range(4)], k=12))
+    p.add("mc3", Seekers.MC([(t.columns[0][r], t.columns[1][r],
+                              t.columns[2][r]) for r in range(4)], k=12))
+    p.add("root", Combiners.Union(k=8), ["mc2", "mc3"])
+    ex = Executor(build_index(lake))
+    _, ib = assert_bit_identical(ex, p)
+    assert ib.launches == 2 + 1                 # two MC groups + the DAG
+    assert {"fused:MC/2", "fused:MC/3"} <= set(ib.node_seconds)
+
+
+def test_fused_single_seeker_plan(lake):
+    plan = Plan()
+    plan.add("solo", seekers_for(lake)["sc"])
+    ex = Executor(build_index(lake))
+    _, ib = assert_bit_identical(ex, plan)
+    assert ib.launches == 2                     # one group + the DAG top-k
+
+
+# --------------------------------------------------------------------------
+# oracle conformance
+# --------------------------------------------------------------------------
+
+def test_fused_matches_oracle(lake):
+    ex = Executor(build_index(lake))
+    for comb in ("intersect", "union", "counter", "difference"):
+        plan = flat_plan(lake, comb)
+        rs, _ = ex.run(plan, optimize=False, fused=True)
+        scores, mask = oracle_run(lake, plan)
+        assert [int(t) for t in rs.ids()] == oracle_ids(scores, mask)
+        np.testing.assert_allclose(np.asarray(rs.scores), scores,
+                                   rtol=1e-6, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# retrace-freedom within capacity / seeker-count buckets
+# --------------------------------------------------------------------------
+
+def test_fused_zero_retrace_within_buckets(lake):
+    ex = Executor(build_index(lake))
+    ex.run(deep_plan(lake, tab=2), fused=True)          # warm every program
+    before = dict(seek.TRACE_COUNTS)
+    for tab in (5, 9, 14):                              # new values, same shape
+        ex.run(deep_plan(lake, tab=tab), fused=True)
+    assert dict(seek.TRACE_COUNTS) == before
+    assert before.get("DAG", 0) >= 1
+    for kind in ("SC_seg", "KW_seg", "MC_seg", "C_seg"):
+        assert before.get(kind, 0) >= 1
+
+
+def test_fused_cut_free_combiner_k_none(lake):
+    """Legacy cut-free plans (CombinerSpec k=None) run fused too."""
+    from repro.core.plan import CombinerSpec
+    ex = Executor(build_index(lake))
+    t = lake.tables[2]
+    for kind in ("union", "intersect", "counter"):
+        p = Plan()
+        p.add("sc", Seekers.SC(t.columns[0][:6], k=12))
+        p.add("kw", Seekers.KW([t.columns[1][0]], k=12))
+        p.add("root", CombinerSpec(kind, None), ["sc", "kw"])
+        assert_bit_identical(ex, p)
+
+
+def test_fused_batch_reorder_reuses_dag_programs(lake):
+    """Batch rows are traced inputs: reshuffling a batch of known plan
+    shapes must not recompile any DAG program."""
+    session = blend.connect(lake)
+    def qa(tab):
+        t = lake.tables[tab]
+        return (blend.sc(list(t.columns[0][:6]), k=12)
+                & blend.kw([t.columns[1][0]], k=12)).top(8)
+    def qb(tab):
+        t = lake.tables[tab]
+        return (blend.mc([(t.columns[0][r], t.columns[1][r])
+                          for r in range(3)], k=12)
+                | blend.kw([t.columns[1][0]], k=12)).top(8)
+    session.query_many([qa(2), qb(4)], fused=True)
+    before = dict(seek.TRACE_COUNTS)
+    session.query_many([qb(6), qa(8)], fused=True)     # swapped order
+    assert dict(seek.TRACE_COUNTS) == before
+
+
+def test_fused_batch_dedupes_identical_seekers(lake):
+    """Identical seekers across a batch collapse onto one batch row (the
+    seeker-count bucket stays at the deduped width — observable as zero
+    retrace vs the single-request run) and stay bit-identical."""
+    session = blend.connect(lake)
+    t = lake.tables[3]
+    q = (blend.sc(list(t.columns[0][:6]), k=12)
+         & blend.kw([t.columns[1][0]], k=12)).top(8)
+    session.query_many([q], fused=True)
+    before = dict(seek.TRACE_COUNTS)
+    rs = session.query_many([q, q, q], fused=True)
+    assert dict(seek.TRACE_COUNTS) == before           # nsp stayed 1
+    cold = session.query(q)
+    assert rs[0].ids == rs[1].ids == rs[2].ids == cold.ids
+
+
+def test_fused_serve_many_zero_retrace(lake):
+    engine = DiscoveryEngine(lake)
+    def batch(tabs):
+        return [(blend.sc(list(lake.tables[t].columns[0][:6]), k=12)
+                 & blend.kw([lake.tables[t].columns[1][0]], k=12)).top(8)
+                for t in tabs]
+    engine.serve_many(batch((2, 4, 6)), fused=True)
+    before = dict(seek.TRACE_COUNTS)
+    engine.serve_many(batch((8, 10, 12)), fused=True)
+    assert dict(seek.TRACE_COUNTS) == before
+
+
+# --------------------------------------------------------------------------
+# query-cache composition
+# --------------------------------------------------------------------------
+
+def test_fused_cached_seekers_drop_out_of_batch(lake):
+    session = blend.connect(lake, cache=True)
+    cold = blend.connect(lake)
+    t = lake.tables[2]
+    sc = blend.sc(list(t.columns[0][:8]), k=20)
+    q1 = (sc | blend.kw([t.columns[1][0]], k=20)).top(10)
+    q2 = (sc | blend.mc([(t.columns[0][r], t.columns[1][r])
+                         for r in range(4)], k=20)).top(10)
+    r1 = session.query(q1, fused=True)
+    assert r1.cache.status == "miss" and r1.info.seeker_runs == 2
+    r2 = session.query(q2, fused=True)                 # shares sc -> partial
+    assert r2.cache.status == "partial"
+    assert r2.info.cached_nodes and r2.info.seeker_runs == 1
+    assert r2.ids == cold.query(q2).ids                # bit-identical to cold
+    r3 = session.query(q2, fused=True)                 # exact-result hit
+    assert r3.cache.status == "hit" and r3.ids == r2.ids
+
+
+def test_fused_cache_epoch_invalidation(lake):
+    session = blend.connect(lake, live=True, cache=True)
+    t = lake.tables[2]
+    q = (blend.sc(list(t.columns[0][:6]), k=20)
+         & blend.kw([t.columns[1][0]], k=20)).top(10)
+    session.query(q, fused=True)
+    tid = session.add_table(Table("fx_inv", [[t.columns[0][0], "zq1"],
+                                             ["zq2", "zq3"]]))
+    r = session.query(q, fused=True)                   # epoch moved: cold
+    assert r.cache.status == "miss"
+    cold = blend.connect(session.live, live=True)
+    assert r.ids == cold.query(q).ids
+    session.drop_table(tid)
+
+
+# --------------------------------------------------------------------------
+# serve_many fused batching
+# --------------------------------------------------------------------------
+
+def test_fused_serve_many_parity_and_launches(lake):
+    engine = DiscoveryEngine(lake)
+    rng = np.random.default_rng(0)
+    from examples.serve_discovery import build_request
+    kinds = ["imputation", "union", "enrichment"]
+    reqs = [build_request(lake, rng, kinds[i % 3]) for i in range(6)]
+    unfused = engine.serve_many(reqs)
+    fused = engine.serve_many(reqs, fused=True)
+    for a, b in zip(unfused, fused):
+        assert a.table_ids == b.table_ids
+        assert a.overflow == b.overflow
+        assert 0 < b.launches <= 4 + 1
+        assert b.launches <= a.launches
+
+
+# --------------------------------------------------------------------------
+# launches observability
+# --------------------------------------------------------------------------
+
+def test_launches_surfaced_in_response_and_explain(lake):
+    session = blend.connect(lake)
+    t = lake.tables[2]
+    q = (blend.sc(list(t.columns[0][:6]), k=12)
+         & blend.kw([t.columns[1][0]], k=12)).top(8)
+    engine = DiscoveryEngine(lake, session=session)
+    r_u = engine.serve(q)
+    r_f = engine.serve(q, fused=True)
+    assert r_u.launches >= 3                    # 2 seekers + combiner
+    assert r_f.launches == 3                    # SC group + KW group + DAG
+    assert r_f.table_ids == r_u.table_ids
+    text = str(session.explain(q, fused=True))
+    assert "launches: 3" in text
+
+
+# --------------------------------------------------------------------------
+# satellite: hash-memo eviction keeps the newest half
+# --------------------------------------------------------------------------
+
+def test_hash_cache_evicts_oldest_half(lake):
+    ex = Executor(build_index(lake))
+    ex._hash_cache.clear()
+    ex._hash_cache_max = 8
+    ex._hash_many([f"old{i}" for i in range(6)])
+    ex._hash_many([f"new{i}" for i in range(3)])       # 9 entries > 8
+    h = ex._hash_many(["probe"])                       # triggers eviction
+    assert len(ex._hash_cache) == 9 // 2 + 1 + 1       # kept half + probe
+    assert "new2" in ex._hash_cache                    # newest survive
+    assert "old0" not in ex._hash_cache                # oldest evicted
+    # evicted values re-hash to the same value (pure function)
+    from repro.core.hashing import hash_value
+    assert ex._hash_many(["old0"])[0] == hash_value("old0")
+    assert h[0] == hash_value("probe")
+
+
+# --------------------------------------------------------------------------
+# property: random DAGs stay bit-identical on the fused path
+# --------------------------------------------------------------------------
+
+@st.composite
+def plan_trees(draw):
+    kinds = ["sc", "kw", "mc", "c"]
+    tab = draw(st.integers(0, 7))
+    depth = draw(st.integers(1, 3))
+
+    def build(d):
+        if d == 0:
+            return ("leaf", draw(st.sampled_from(kinds)))
+        op = draw(st.sampled_from(["and", "or", "sub", "counter", "leaf"]))
+        if op == "leaf":
+            return ("leaf", draw(st.sampled_from(kinds)))
+        if op == "sub":
+            return ("sub", build(d - 1), build(d - 1))
+        n = draw(st.integers(2, 3))
+        return (op, *[build(d - 1) for _ in range(n)])
+
+    return tab, build(depth)
+
+
+def _materialize(tree, lake, tab):
+    kind = tree[0]
+    if kind == "leaf":
+        cols = lake.tables[tab].columns
+        return {"sc": blend.sc(list(cols[0][:6]), k=12),
+                "kw": blend.kw([cols[1][0], cols[1][2]], k=12),
+                "mc": blend.mc([(cols[0][r], cols[1][r]) for r in range(3)],
+                               k=12),
+                "c": blend.corr(list(cols[0][:8]),
+                                list(map(float, range(8))), k=12)}[tree[1]]
+    kids = [_materialize(c, lake, tab) for c in tree[1:]]
+    if kind in ("and", "or"):
+        uniq = list(dict.fromkeys(kids))
+        if len(uniq) == 1:
+            return uniq[0]
+        return (L.And if kind == "and" else L.Or)(tuple(uniq))
+    if kind == "sub":
+        return L.Sub(kids[0], kids[1])
+    return L.Counter(tuple(kids))
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.data())
+def test_property_random_dag_fused_parity(lake, data):
+    session = blend.connect(lake)
+    tab, tree = data.draw(plan_trees())
+    e = _materialize(tree, lake, tab)
+    if isinstance(e, L.Seek):
+        e = e & (e | e)
+    for optimize in (True, False):
+        a = session.query(e, optimize=optimize)
+        b = session.query(e, optimize=optimize, fused=True)
+        np.testing.assert_array_equal(np.asarray(a.scores),
+                                      np.asarray(b.scores))
+        np.testing.assert_array_equal(np.asarray(a.result.mask),
+                                      np.asarray(b.result.mask))
+        assert a.ids == b.ids
