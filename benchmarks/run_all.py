@@ -12,7 +12,12 @@ query-cache workloads: repeat-query hits vs cold serving (acceptance:
 overhead, batched warm serving, and the mutation-invalidation cycle.
 ``BENCH_5.json`` records the fused-execution workloads: deep-DAG plan
 latency fused vs unfused (acceptance: >= 3x p50, launches <= n_kinds + 1)
-and 12-request ``serve_many`` throughput (>= 2x).
+and 12-request ``serve_many`` throughput (>= 2x).  ``BENCH_6.json`` records
+the sharded-lake workloads (benchmarks/sharded_bench.py, run as a
+subprocess under 8 forced host devices): per-device probe throughput and
+``serve_many`` req/s vs shard count 1/2/4/8, weak-scaling efficiency, and
+the merge-epilogue overhead (acceptance: >= 3x probe throughput at 8
+shards vs 1).
 
     PYTHONPATH=src python benchmarks/run_all.py [--out PATH] [--full]
 
@@ -389,6 +394,23 @@ def main(out_path: Path, full: bool = False, iters: int = 10) -> dict:
     fused_path.write_text(
         json.dumps(fused_payload, indent=2, sort_keys=True) + "\n")
     print(f"wrote {fused_path}")
+
+    # sharded-lake workloads need their own process: jax locks the host
+    # device count at first init, and BENCH_6 runs on 8 forced CPU devices
+    import os
+    import subprocess
+    sharded_path = out_path.parent / "BENCH_6.json"
+    r = subprocess.run(
+        [sys.executable, str(REPO_ROOT / "benchmarks/sharded_bench.py"),
+         "--out", str(sharded_path), "--iters", str(iters)],
+        env={**os.environ,
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=8"},
+        check=False)
+    if r.returncode == 0:
+        print(f"wrote {sharded_path}")
+    else:
+        print(f"sharded bench failed (exit {r.returncode}); "
+              f"skipping {sharded_path}")
 
     for name, s in {**workloads, **live, **cache, **fused}.items():
         extra = "".join(

@@ -6,7 +6,7 @@ numeric view.  This is the config behind the ``blend-discovery`` dry-run
 cells (``python -m repro.launch.dryrun --arch blend-discovery``) and the
 distributed-seeker roofline rows.
 """
-from repro.core.distributed import GITTABLES_SCALE
+from repro.dist.shard import GITTABLES_SCALE
 
 CONFIG = dict(
     name="blend-gittables",

@@ -46,8 +46,9 @@ class OverflowSlice:
     are this plan's seekers' rows in ``vec``.  Materializing the slice at
     dispatch time would cost one tiny device gather per seeker; deferring
     it to the ``ExecInfo.overflow`` read keeps the fused dispatch path free
-    of per-node device ops."""
-    vec: object                   # [n_seekers_p] device overflow vector
+    of per-node device ops.  On a sharded lake ``vec`` is a *tuple* of
+    per-shard vectors (overflow sums across shards, like scores)."""
+    vec: object                   # [n_seekers_p] device vector, or a tuple
     rows: list                    # this plan's row indices into vec
 
 
@@ -87,8 +88,8 @@ class ExecInfo:
                               for p in self.overflow_parts])
         total = 0
         for p, r in zip(self.overflow_parts, raw):
-            a = np.asarray(r)
-            total += int(a[p.rows].sum() if isinstance(p, OverflowSlice)
+            a = np.asarray(r)    # sharded slice: [n_shards, n_seekers_p]
+            total += int(a[..., p.rows].sum() if isinstance(p, OverflowSlice)
                          else a.sum())
         return total
 

@@ -78,6 +78,10 @@ class _Task:
     qk_hi: np.ndarray | None = None
     nt: int = 0                      # MC: deduped tuple count
     m_cap: int = 0                   # this seeker's capacity-ladder rung
+    #: sharded lakes: per-shard capacity rungs from per-shard counts — a
+    #: shard probes only its own postings, so its window can be (much)
+    #: smaller than the global rung; exact as long as no shard overflows
+    shard_caps: tuple = ()
     group_key: tuple = ()
     row: int = -1                    # row in the group's stacked output
     head: object = None              # canonical task for this spec: dupes
@@ -237,7 +241,16 @@ def _hash_tasks(ex, tasks):
     lens = np.array([len(r) for r in reqs], np.int64)
     offs = np.concatenate([[0], np.cumsum(lens)])
     all_h = np.concatenate(reqs) if offs[-1] else np.zeros(0, np.uint32)
-    counts = ex.index.host_counts(all_h)
+    n_shards = getattr(ex, "n_shards", 0)
+    if n_shards:
+        # per-shard counts in the same ONE batched lookup: global capacities
+        # (and the MC initiator-column pick) come from the summed counts —
+        # identical to a 1-shard run — while each shard's probe window sizes
+        # to its own counts (a shard only holds its own tables' postings)
+        per = ex.index.host_counts(all_h, per_shard=True)
+        counts = per.sum(axis=0)
+    else:
+        counts = ex.index.host_counts(all_h)
     for i, t in enumerate(tasks):
         c = counts[offs[i]:offs[i + 1]]
         if t.spec.kind == "MC":
@@ -248,6 +261,11 @@ def _hash_tasks(ex, tasks):
             t.m_cap = ex._quantize_cap(int(cm.max(initial=1)))
         else:
             t.m_cap = ex._quantize_cap(int(c.max(initial=1)))
+        if n_shards:
+            t.shard_caps = tuple(
+                ex._quantize_cap(int(per[s, offs[i]:offs[i + 1]]
+                                     .max(initial=1)))
+                for s in range(n_shards))
 
 
 # --------------------------------------------------------------------------
@@ -262,13 +280,28 @@ def _launch_group(ex, key, tasks):
     """Dispatch one seeker group as a single device program.  Returns
     (scores [n_seekers_p, n_tables], overflow [n_seekers_p]) — both lazy.
     ``tasks`` are the deduped head tasks of the group (run_fused collapses
-    identical specs before hashing)."""
+    identical specs before hashing).
+
+    Sharded executors (``ex.engines``) dispatch the same batched program
+    once per shard — same query operands, per-shard capacity windows — and
+    return *tuples* of per-shard (scores, overflow).  Each shard holds
+    whole tables, so summing the per-shard matrices (inside ``_run_dag``)
+    is exact: every table slot is nonzero on exactly one shard.  The whole
+    per-shard fan-out is ONE logical launch (ExecInfo.launches)."""
     for i, t in enumerate(tasks):
         t.row = i
-    eng = ex.engine
     kind = key[0]
     nsp = _pow2(len(tasks), lo=1)
-    m_cap = max(t.m_cap for t in tasks)
+    spans = []
+
+    def fill_caps(caps, shard):
+        m_cap = 1
+        for (off, n), t in zip(spans, tasks):
+            c = t.m_cap if shard is None else t.shard_caps[shard]
+            caps[off:off + n] = c
+            m_cap = max(m_cap, c)
+        return m_cap
+
     if kind == "MC":
         n_cols = key[1]
         total = sum(t.nt for t in tasks)
@@ -278,7 +311,6 @@ def _launch_group(ex, key, tasks):
         qlo = np.zeros(width, np.uint32)
         qhi = np.zeros(width, np.uint32)
         seg = np.zeros(width, np.int32)
-        caps = np.zeros(width, np.int32)
         tmask = np.zeros(width, bool)
         off = 0
         for i, t in enumerate(tasks):
@@ -288,45 +320,70 @@ def _launch_group(ex, key, tasks):
             qlo[off:off + n] = t.qk_lo
             qhi[off:off + n] = t.qk_hi
             seg[off:off + n] = i
-            caps[off:off + n] = t.m_cap
             tmask[off:off + n] = True
+            spans.append((off, n))
             off += n
+
         # numpy operands go straight into the jitted call: jit's own
         # device_put of the whole operand list is much cheaper than
-        # per-array jnp.asarray round-trips on the hot path
-        return seek.mc_seeker_seg(
-            eng, th, init, qlo, qhi, seg, caps,
-            m_cap=m_cap, n_seekers=nsp, n_tables=ex.n_tables, n_cols=n_cols,
-            row_stride=ex.index.row_stride, tuple_mask=tmask)
-    total = sum(len(t.h) for t in tasks)
-    width = _pow2(total, lo=16)
-    qh = np.full(width, PAD_SENTINEL, np.uint32)
-    qm = np.zeros(width, bool)
-    seg = np.zeros(width, np.int32)
+        # per-array jnp.asarray round-trips on the hot path (and, being
+        # uncommitted, they follow each shard engine to its device)
+        def dispatch(eng, caps, m_cap):
+            return seek.mc_seeker_seg(
+                eng, th, init, qlo, qhi, seg, caps,
+                m_cap=m_cap, n_seekers=nsp, n_tables=ex.n_tables,
+                n_cols=n_cols, row_stride=ex.index.row_stride,
+                tuple_mask=tmask)
+    else:
+        total = sum(len(t.h) for t in tasks)
+        width = _pow2(total, lo=16)
+        qh = np.full(width, PAD_SENTINEL, np.uint32)
+        qm = np.zeros(width, bool)
+        seg = np.zeros(width, np.int32)
+        qb = np.zeros(width, np.int8)
+        off = 0
+        for i, t in enumerate(tasks):
+            n = len(t.h)
+            qh[off:off + n] = t.h
+            qm[off:off + n] = True
+            seg[off:off + n] = i
+            if kind == "C":
+                qb[off:off + n] = t.qbit
+            spans.append((off, n))
+            off += n
+
+        def dispatch(eng, caps, m_cap):
+            if kind == "SC":
+                return seek.sc_seeker_seg(eng, qh, qm, seg, caps,
+                                          m_cap=m_cap, n_seekers=nsp,
+                                          n_tables=ex.n_tables,
+                                          max_cols=ex.max_cols)
+            if kind == "KW":
+                return seek.kw_seeker_seg(eng, qh, qm, seg, caps,
+                                          m_cap=m_cap, n_seekers=nsp,
+                                          n_tables=ex.n_tables)
+            return seek.c_seeker_seg(eng, qh, qm, qb, seg, caps,
+                                     m_cap=m_cap, row_cap=ex.row_cap,
+                                     n_seekers=nsp, n_tables=ex.n_tables,
+                                     max_cols=ex.max_cols, h_sample=key[1],
+                                     sampling=key[2],
+                                     row_stride=ex.index.row_stride)
+
+    engines = getattr(ex, "engines", None)
     caps = np.zeros(width, np.int32)
-    qb = np.zeros(width, np.int8)
-    off = 0
-    for i, t in enumerate(tasks):
-        n = len(t.h)
-        qh[off:off + n] = t.h
-        qm[off:off + n] = True
-        seg[off:off + n] = i
-        caps[off:off + n] = t.m_cap
-        if kind == "C":
-            qb[off:off + n] = t.qbit
-        off += n
-    if kind == "SC":
-        return seek.sc_seeker_seg(eng, qh, qm, seg, caps, m_cap=m_cap,
-                                  n_seekers=nsp, n_tables=ex.n_tables,
-                                  max_cols=ex.max_cols)
-    if kind == "KW":
-        return seek.kw_seeker_seg(eng, qh, qm, seg, caps, m_cap=m_cap,
-                                  n_seekers=nsp, n_tables=ex.n_tables)
-    return seek.c_seeker_seg(eng, qh, qm, qb, seg, caps, m_cap=m_cap,
-                             row_cap=ex.row_cap, n_seekers=nsp,
-                             n_tables=ex.n_tables, max_cols=ex.max_cols,
-                             h_sample=key[1], sampling=key[2],
-                             row_stride=ex.index.row_stride)
+    if engines is None:
+        m_cap = fill_caps(caps, None)
+        return dispatch(ex.engine, caps, m_cap)
+    scores, ovf = [], []
+    for s, eng in enumerate(engines):
+        caps = np.zeros(width, np.int32)
+        m_cap = fill_caps(caps, s)
+        sc, ov = dispatch(eng, caps, m_cap)
+        # stage results on the merge device so the single DAG program
+        # consumes them without implicit cross-device transfers
+        scores.append(jax.device_put(sc, ex.merge_device))
+        ovf.append(jax.device_put(ov, ex.merge_device))
+    return tuple(scores), tuple(ovf)
 
 
 # --------------------------------------------------------------------------
@@ -366,7 +423,18 @@ def _run_dag(group_scores, rows, cached_scores, cached_masks, *, prog):
         op = ins[0]
         if op == "seeker":
             _, gi, j, k, allowed = ins
-            s = group_scores[gi][rows[j]]
+            gs = group_scores[gi]
+            if isinstance(gs, tuple):
+                # sharded group: sum the per-shard score matrices' rows —
+                # exact in f32 (each table slot is nonzero on exactly one
+                # shard; the rest contribute literal zeros).  This is the
+                # whole cross-shard merge epilogue: it fuses into the one
+                # DAG program, costing no extra launch.
+                s = gs[0][rows[j]]
+                for m in gs[1:]:
+                    s = s + m[rows[j]]
+            else:
+                s = gs[rows[j]]
             if allowed >= 0:
                 s = jnp.where(regs[allowed][1], s, 0.0)
             regs.append(_topk(s, k))
@@ -490,7 +558,8 @@ def run_fused(ex, plans, optimize=True, cost_model=None, cache=None):
             for ckey, reg, task in pr.cache_puts:
                 cache.put_seeker(ckey, ResultSet(scores=regs[reg][0],
                                                  mask=regs[reg][1]),
-                                 group_out[task.group_key][1][task.row],
+                                 OverflowSlice(group_out[task.group_key][1],
+                                               [task.row]),
                                  ex.n_tables)
         out.append((ResultSet(scores=regs[pr.out_reg][0],
                               mask=regs[pr.out_reg][1]), info))

@@ -53,7 +53,7 @@ def validate_row_stride(n_tables: int, row_stride: int, max_rows: int = 0):
         raise ValueError(
             f"int32 rowkey overflow: {n_tables} tables * row_stride="
             f"{row_stride} exceeds 2^31; shard the lake "
-            f"(see core/distributed.py)")
+            f"(see dist/shard.py)")
 
 
 def _is_numeric_col(values) -> bool:

@@ -35,9 +35,10 @@ two ladder (store/segments.py), so a mutation that lands in an already-seen
 segment topology re-uses the compiled seekers (zero new traces — the
 retrace-free serving contract extends to live lakes).
 
-``probe_sorted`` is also exposed as a free function: the distributed
-shard_map seekers (core/distributed.py) reuse the same primitive on their
-shard-local array slices, where no engine object exists.
+A sharded lake (dist/shard.py) builds one engine per shard with
+``from_store(..., device=...)``, pinning each shard's concatenated arrays to
+its own mesh device; the fused executor then dispatches the same jitted
+seekers per shard and sums the score matrices on the merge device.
 """
 from __future__ import annotations
 
@@ -185,16 +186,18 @@ class MatchEngine:
 
     @classmethod
     def from_store(cls, store, *, backend: str = "sorted",
-                   interpret: bool = False):
+                   interpret: bool = False, device=None):
         """Engine over a LiveLake SegmentStore: per-segment device arrays are
         concatenated *on device* (host->device transfer is only ever the new
         segment — segment uploads are memoized on the immutable segments),
-        and the per-segment bounds become static aux data."""
+        and the per-segment bounds become static aux data.  ``device`` pins
+        every array to one mesh device (sharded lakes build one engine per
+        shard on its own device)."""
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, "
                              f"got {backend!r}")
         segs = store.segments
-        seg_devs = [s.device_arrays() for s in segs]
+        seg_devs = [s.device_arrays(device) for s in segs]
         dev = {k: jnp.concatenate([d[k] for d in seg_devs])
                for k in seg_devs[0]}
         seg_bounds, num_bounds = [], []
@@ -210,7 +213,8 @@ class MatchEngine:
             bhs, bps, ws = [], [], []
             for (start, _, _), s in zip(seg_bounds, segs):
                 width = ((max(s.max_bucket_count(), 1) + 127) // 128) * 128
-                bh_i, bp_i = s.device_buckets(width, payload_offset=start)
+                bh_i, bp_i = s.device_buckets(width, payload_offset=start,
+                                              device=device)
                 bhs.append(bh_i)
                 bps.append(bp_i)
                 ws.append(width)
@@ -222,7 +226,9 @@ class MatchEngine:
                            num_bounds=tuple(num_bounds),
                            n_tables=store.n_tables, max_cols=store.max_cols,
                            row_stride=store.row_stride)
-        return cls(dev, bh, bp, cfg, alive=jnp.asarray(store.alive))
+        alive = jnp.asarray(store.alive) if device is None else \
+            jax.device_put(np.asarray(store.alive), device)
+        return cls(dev, bh, bp, cfg, alive=alive)
 
     @property
     def backend(self) -> str:

@@ -283,7 +283,7 @@ def main():
         sys.exit(1 if failures else 0)
 
     if args.arch == "blend-discovery":
-        from repro.core.distributed import dryrun_discovery
+        from repro.dist.shard import dryrun_discovery
         rec = dryrun_discovery(multi_pod=args.multipod)
         shape_name = args.shape or "lake"
         out = cell_path("blend-discovery", shape_name, args.multipod)

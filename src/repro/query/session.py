@@ -94,9 +94,23 @@ class Explain:
         if self.index_shape:
             s = self.index_shape
             lines.append("== index ==")
-            lines.append(f"  mode: {s['mode']}   epoch: {s['epoch']}   "
-                         f"segments: {s['segments']}")
-            lines.append(f"  postings/segment: {s['postings_per_segment']}")
+            if s.get("shards"):
+                mesh = "x".join(str(d) for d in s["mesh_shape"])
+                lines.append(f"  mode: {s['mode']}   mesh: {mesh} "
+                             f"({s['shards']} shards)   "
+                             f"epoch: {s['epoch']}")
+                for p in s["per_shard"]:
+                    lines.append(f"  shard {p['shard']}: "
+                                 f"segments: {p['segments']}   "
+                                 f"postings: {p['postings']}   "
+                                 f"tables: {p['live_tables']}   "
+                                 f"tombstones: {p['tombstones']}   "
+                                 f"[{p['device']}]")
+            else:
+                lines.append(f"  mode: {s['mode']}   epoch: {s['epoch']}   "
+                             f"segments: {s['segments']}")
+                lines.append(
+                    f"  postings/segment: {s['postings_per_segment']}")
             lines.append(f"  live tables: {s['live_tables']}"
                          + (f"   tombstoned: {s['tombstoned']}"
                             if s["tombstoned"] else ""))
@@ -160,7 +174,7 @@ class Session:
         from repro.query.fingerprint import object_nonce
         ex = self.executor
         return (ex.backend, ex.interpret, ex.m_cap_max, ex.row_cap,
-                ex.bucket_width,
+                ex.bucket_width, getattr(ex, "n_shards", 0),
                 object_nonce(self.cost_model)
                 if self.cost_model is not None else 0)
 
@@ -414,7 +428,8 @@ def _make_cache(cache):
 
 
 def connect(lake, cost_model: CostModel | None = None, live: bool = False,
-            cache=False, **executor_opts) -> Session:
+            cache=False, shards: int | None = None,
+            **executor_opts) -> Session:
     """Open a discovery session on a lake: builds the unified index and the
     executor (kwargs forwarded: ``backend=``, ``interpret=``, ``m_cap_max=``,
     ...), returning the Session handle that serves queries.
@@ -425,12 +440,29 @@ def connect(lake, cost_model: CostModel | None = None, live: bool = False,
     a from-scratch rebuild — while the lake evolves.  ``lake`` may also be
     an existing ``LiveLake`` handle.
 
+    ``shards=N`` partitions the store across N devices along the table axis
+    (dist/shard.py): queries execute as fused per-shard probes plus one
+    cross-shard merge, bit-identical to an unsharded session; combine with
+    ``live=True`` for shard-local mutations (``add_table`` routes to the
+    least-loaded shard).
+
     ``cache=True`` (or a byte budget / QueryCache instance) enables the
     semantic query cache (serve/cache.py): repeated or subtree-sharing
     queries are served from compiled-plan, exact-result, and per-seeker
     caches, all invalidated by the store epoch so mutations never serve
     stale ids."""
     qc = _make_cache(cache)
+    if shards:
+        from repro.dist.shard import ShardedExecutor, ShardedStore
+        from repro.store.live import LiveLake
+        if isinstance(lake, LiveLake):
+            raise TypeError("pass the raw lake (not a LiveLake) with "
+                            "shards=: the store must be built sharded")
+        store = ShardedStore(lake, n_shards=shards)
+        executor = ShardedExecutor(store, **executor_opts)
+        ll = LiveLake(lake, store=store) if live else None
+        return Session(executor, lake=lake, cost_model=cost_model,
+                       live=ll, cache=qc)
     if live:
         from repro.store.live import LiveLake
         ll = lake if isinstance(lake, LiveLake) else LiveLake(lake)

@@ -75,23 +75,27 @@ class DiscoveryEngine:
     With ``cache=True`` (or a byte budget) the Session serves repeats from
     the semantic query cache (serve/cache.py) — ``DiscoveryResponse.cache``
     reports hit/partial/miss plus resident entries/bytes, and mutations
-    invalidate by epoch so cached ids are never stale."""
+    invalidate by epoch so cached ids are never stale.
+
+    With ``shards=N`` the lake is partitioned across N devices along the
+    table axis (dist/shard.py): every request runs as fused per-shard probes
+    plus one cross-shard merge, bit-identical to the unsharded engine."""
 
     def __init__(self, lake, cost_model=None, backend: str = "sorted",
                  interpret: bool = False, session=None, live: bool = False,
-                 cache=False):
+                 cache=False, shards: int | None = None):
         if session is not None:
-            if backend != "sorted" or interpret or live or cache:
-                raise ValueError("backend/interpret/live/cache are fixed by "
-                                 "the given session; pass them to connect() "
-                                 "instead")
+            if backend != "sorted" or interpret or live or cache or shards:
+                raise ValueError("backend/interpret/live/cache/shards are "
+                                 "fixed by the given session; pass them to "
+                                 "connect() instead")
             if cost_model is not None:
                 session.cost_model = cost_model
             self.session = session
         else:
             self.session = connect(lake, cost_model=cost_model,
                                    backend=backend, interpret=interpret,
-                                   live=live, cache=cache)
+                                   live=live, cache=cache, shards=shards)
         self.lake = lake
 
     # -------------------------------------------------- live-lake mutations

@@ -50,7 +50,10 @@ class LiveLake:
         tid = self.store.add_table(table, name=name)
         self.tables[tid] = table
         if self.auto_compact:
-            maybe_compact(self.store, self.policy)
+            if hasattr(self.store, "shards"):    # sharded: per-shard tiers
+                self.store.maybe_compact(self.policy)
+            else:
+                maybe_compact(self.store, self.policy)
         return tid
 
     def drop_table(self, ref) -> int:
@@ -61,6 +64,9 @@ class LiveLake:
     def compact(self, full: bool = True, reclaim_ids: bool = False):
         """Explicit compaction; with ``reclaim_ids`` returns the old->new
         table-id mapping (and re-keys the Table registry)."""
+        if hasattr(self.store, "shards"):        # sharded: shard-local merges
+            return self.store.compact(self.policy, full=full,
+                                      reclaim_ids=reclaim_ids)
         remap = compact_store(self.store, self.policy, full=full,
                               reclaim_ids=reclaim_ids)
         if remap is not None:
@@ -71,6 +77,11 @@ class LiveLake:
     # ----------------------------------------------------------- persistence
     def snapshot(self, path):
         """Save the compacted live index; returns the manifest path."""
+        if hasattr(self.store, "shards"):
+            raise NotImplementedError(
+                "snapshots of sharded lakes are not supported yet: "
+                "snapshot each shard's lake separately or open the lake "
+                "unsharded")
         return snap.save(self.store, path)
 
     @classmethod

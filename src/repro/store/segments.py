@@ -68,7 +68,9 @@ class Segment:
     n_real: int
     n_num: int
     tables: tuple                # global table ids wholly contained here
-    _dev: dict | None = field(default=None, repr=False, compare=False)
+    #: memoized device uploads, keyed by target device (None = jax default) —
+    #: a sharded lake pins each shard's segments to its own mesh device
+    _dev: dict = field(default_factory=dict, repr=False, compare=False)
     _dev_buckets: dict = field(default_factory=dict, repr=False, compare=False)
 
     @property
@@ -85,36 +87,43 @@ class Segment:
             self.bucket_offsets.nbytes
 
     # ---------------------------------------------------------------- device
-    def device_arrays(self) -> dict:
+    def device_arrays(self, device=None) -> dict:
         """The jnp-side dict slice this segment contributes to the engine's
-        concatenated arrays.  Memoized: a segment is immutable, so it is
-        uploaded to the device at most once no matter how many engine
-        refreshes it survives."""
-        if self._dev is None:
+        concatenated arrays.  Memoized per target device: a segment is
+        immutable, so it is uploaded to each device at most once no matter
+        how many engine refreshes it survives.  ``device=None`` uses the jax
+        default device; a sharded lake passes each shard's mesh device."""
+        if device not in self._dev:
+            import jax
             import jax.numpy as jnp
+            if device is None:
+                put = jnp.asarray
+            else:
+                def put(a):
+                    return jax.device_put(np.asarray(a), device)
             p = self.num_perm
-            self._dev = {
-                "hash": jnp.asarray(self.cell_hash),
-                "table": jnp.asarray(self.table_id),
-                "col": jnp.asarray(self.col_id),
-                "row": jnp.asarray(self.row_id),
-                "sk_lo": jnp.asarray(self.superkey_lo),
-                "sk_hi": jnp.asarray(self.superkey_hi),
-                "quadrant": jnp.asarray(self.quadrant),
-                "rank_conv": jnp.asarray(self.rank_conv),
-                "rank_rand": jnp.asarray(self.rank_rand),
-                "num_rowkey": jnp.asarray(self.num_rowkey),
-                "num_table": jnp.asarray(self.table_id[p]),
-                "num_col": jnp.asarray(self.col_id[p]),
-                "num_quadrant": jnp.asarray(self.quadrant[p]),
-                "num_rank_conv": jnp.asarray(
+            self._dev[device] = {
+                "hash": put(self.cell_hash),
+                "table": put(self.table_id),
+                "col": put(self.col_id),
+                "row": put(self.row_id),
+                "sk_lo": put(self.superkey_lo),
+                "sk_hi": put(self.superkey_hi),
+                "quadrant": put(self.quadrant),
+                "rank_conv": put(self.rank_conv),
+                "rank_rand": put(self.rank_rand),
+                "num_rowkey": put(self.num_rowkey),
+                "num_table": put(self.table_id[p]),
+                "num_col": put(self.col_id[p]),
+                "num_quadrant": put(self.quadrant[p]),
+                "num_rank_conv": put(
                     np.where(np.arange(len(p)) < self.n_num,
                              self.rank_conv[p], PAD_RANK)),
-                "num_rank_rand": jnp.asarray(
+                "num_rank_rand": put(
                     np.where(np.arange(len(p)) < self.n_num,
                              self.rank_rand[p], PAD_RANK)),
             }
-        return self._dev
+        return self._dev[device]
 
     def max_bucket_count(self) -> int:
         return int(np.diff(self.bucket_offsets).max(initial=0))
@@ -137,16 +146,23 @@ class Segment:
         bp[buckets[keep], pos[keep]] = np.nonzero(keep)[0].astype(np.int32)
         return bh, bp, overflow
 
-    def device_buckets(self, width: int, payload_offset: int = 0):
+    def device_buckets(self, width: int, payload_offset: int = 0,
+                       device=None):
         """Device-side (bucket_hashes, bucket_payload) with payloads offset
-        into the engine's concatenated arrays; memoized per (width, offset)."""
-        key = (width, payload_offset)
+        into the engine's concatenated arrays; memoized per (width, offset,
+        device)."""
+        key = (width, payload_offset, device)
         if key not in self._dev_buckets:
+            import jax
             import jax.numpy as jnp
             bh, bp, overflow = self.padded_buckets(width)
             assert overflow == 0, "segment bucket layout must be lossless"
             bp = np.where(bp >= 0, bp + payload_offset, -1).astype(np.int32)
-            self._dev_buckets[key] = (jnp.asarray(bh), jnp.asarray(bp))
+            if device is None:
+                self._dev_buckets[key] = (jnp.asarray(bh), jnp.asarray(bp))
+            else:
+                self._dev_buckets[key] = (jax.device_put(bh, device),
+                                          jax.device_put(bp, device))
         return self._dev_buckets[key]
 
     # ------------------------------------------------------------- rekeying
@@ -168,11 +184,15 @@ class Segment:
             num_rowkey=num_rowkey, bucket_bits=self.bucket_bits,
             bucket_offsets=self.bucket_offsets, n_real=self.n_real,
             n_num=self.n_num, tables=self.tables)
-        if self._dev is not None:
+        if self._dev:
             # only num_rowkey changed: carry the memoized uploads over so
             # widening never re-transfers the posting arrays
+            import jax
             import jax.numpy as jnp
-            seg._dev = dict(self._dev, num_rowkey=jnp.asarray(num_rowkey))
+            for device, dev in self._dev.items():
+                rk_dev = jnp.asarray(num_rowkey) if device is None else \
+                    jax.device_put(num_rowkey, device)
+                seg._dev[device] = dict(dev, num_rowkey=rk_dev)
         seg._dev_buckets = self._dev_buckets    # hash layout is unchanged
         return seg
 
@@ -232,29 +252,52 @@ class SegmentStore:
     MIN_HEADROOM = 8
 
     def __init__(self, lake=None, *, bucket_bits: int = 12, seed: int = 0,
-                 with_quadrants: bool = True):
+                 with_quadrants: bool = True, entries=None,
+                 table_names=None, table_cap: int | None = None,
+                 row_stride: int | None = None,
+                 max_cols: int | None = None):
+        """Default path: index every table of ``lake`` under global ids
+        ``0..n-1``.  Shard path (dist/shard.py): ``entries`` is an explicit
+        ``[(global_id, Table), ...]`` subset and ``table_cap`` /
+        ``row_stride`` / ``max_cols`` impose the *global* geometry, so every
+        shard compiles seekers against identical static shapes and the
+        per-shard score vectors sum into the global one slot-for-slot."""
         self.bucket_bits = bucket_bits
         self.seed = seed
         self.with_quadrants = with_quadrants
-        tables = list(lake.tables) if lake is not None else []
-        n = len(tables)
-        self.table_names = [t.name for t in tables]
-        self._max_cols_real = max([t.n_cols for t in tables], default=1)
-        max_rows = max([t.n_rows for t in tables], default=1)
-        self.row_stride = _ceil_pow2(max(max_rows, 1))
-        self._table_cap = _ceil_pow2(max(n + self.MIN_HEADROOM, 16))
+        if entries is None:
+            tables = list(lake.tables) if lake is not None else []
+            entries = list(enumerate(tables))
+            table_names = [t.name for t in tables]
+        else:
+            entries = list(entries)
+            table_names = list(table_names or [])
+        owned = [t for _, t in entries]
+        n_slots = max(len(table_names),
+                      max([g for g, _ in entries], default=-1) + 1)
+        table_names += [None] * (n_slots - len(table_names))
+        self.table_names = table_names
+        self._max_cols_real = max([t.n_cols for t in owned], default=1)
+        if max_cols is not None:
+            self._max_cols_real = max(self._max_cols_real, max_cols)
+        max_rows = max([t.n_rows for t in owned], default=1)
+        self.row_stride = row_stride if row_stride is not None else \
+            _ceil_pow2(max(max_rows, 1))
+        self._table_cap = table_cap if table_cap is not None else \
+            _ceil_pow2(max(n_slots + self.MIN_HEADROOM, 16))
         validate_row_stride(self._table_cap, self.row_stride, max_rows)
         self.alive = np.zeros(self._table_cap, bool)
-        self.alive[:n] = True
         self.table_rows = np.zeros(self._table_cap, np.int32)
-        self.table_rows[:n] = [t.n_rows for t in tables]
+        for gid, tab in entries:
+            self.alive[gid] = True
+            self.table_rows[gid] = tab.n_rows
         #: ids whose postings are fully gone (safe to hand out again)
         self.free_ids: list = []
         #: dropped ids whose postings still sit tombstoned in some segment
         self.pending_dead: set = set()
         self.epoch = 0
         self.segments: list[Segment] = [build_segment(
-            list(enumerate(tables)), bucket_bits=bucket_bits,
+            entries, bucket_bits=bucket_bits,
             row_stride=self.row_stride, seed=seed,
             with_quadrants=with_quadrants)]
 
@@ -356,6 +399,19 @@ class SegmentStore:
         self.table_names.append(name)
         return tid
 
+    def grow_capacity(self, new_cap: int):
+        """Grow the table-slot capacity to ``new_cap`` (a power of two).
+        Changes the static score-vector length every seeker compiles
+        against, so the epoch is bumped — a sharded lake must apply the
+        same growth (and bump) on *every* shard to keep shapes aligned."""
+        if new_cap <= self._table_cap:
+            return
+        validate_row_stride(new_cap, self.row_stride)
+        self._table_cap = new_cap
+        self.alive = _pad_to(self.alive, new_cap, False)
+        self.table_rows = _pad_to(self.table_rows, new_cap, 0)
+        self.bump_epoch()
+
     def _widen_stride(self, max_rows: int):
         stride = _ceil_pow2(max_rows)
         validate_row_stride(self._table_cap, stride, max_rows)
@@ -375,15 +431,30 @@ class SegmentStore:
             raise KeyError(f"table id {tid} is not live")
         return tid
 
-    def add_table(self, table, name: str | None = None) -> int:
+    def add_table(self, table, name: str | None = None,
+                  tid: int | None = None) -> int:
         """Index one new table as an L0 delta segment; returns its global
         id.  No existing segment is touched (auto-widening the rowkey stride
         for an unusually long table re-keys, but never re-sorts, the
-        numeric views)."""
+        numeric views).  ``tid`` pins the global id (sharded lakes allocate
+        ids at the coordinator and route the table to one shard)."""
         name = table.name if name is None else name
         if table.n_rows > self.row_stride:
             self._widen_stride(table.n_rows)   # validates before allocating
-        tid = self._alloc_id(name)
+        if tid is None:
+            tid = self._alloc_id(name)
+        else:
+            if tid in self.free_ids:
+                self.free_ids.remove(tid)
+            if tid >= self._table_cap:
+                cap = self._table_cap
+                while tid >= cap:
+                    cap *= 2
+                self.grow_capacity(cap)
+            if tid >= len(self.table_names):
+                self.table_names += [None] * (tid + 1 -
+                                              len(self.table_names))
+            self.table_names[tid] = name
         self.alive[tid] = True
         self.table_rows[tid] = table.n_rows
         self._max_cols_real = max(self._max_cols_real, table.n_cols)
@@ -437,8 +508,8 @@ class SegmentStore:
     def live_postings(self, segments=None) -> dict:
         """Concatenated live posting arrays (tombstones dropped, unsorted)
         of ``segments`` (default: all) — the one tombstone-GC collection
-        path, shared by compaction merges, snapshots and the distributed
-        shard loader."""
+        path, shared by compaction merges, snapshots and the sharded lake
+        loader (dist/shard.py)."""
         cols = {k: [] for k in POSTING_KEYS}
         for seg in (self.segments if segments is None else segments):
             keep = self.alive[seg.table_id[: seg.n_real]]
@@ -450,8 +521,8 @@ class SegmentStore:
 
     def merged_index(self) -> UnifiedIndex:
         """A compacted, tombstone-free ``UnifiedIndex`` view of the live
-        postings (snapshot persistence and the distributed shard loader
-        consume this; the store itself is not mutated)."""
+        postings (snapshot persistence consumes this; the store itself is
+        not mutated)."""
         parts = sort_postings(self.live_postings())
         num_perm, num_rowkey = numeric_view(parts, self.row_stride)
         return UnifiedIndex(

@@ -435,8 +435,8 @@ def test_discovery_engine_live_mutations():
         static.add_table(t)
 
 
-def test_distributed_loader_accepts_store():
-    from repro.core import distributed as dist
+def test_sharded_store_accepts_live_mutations():
+    from repro.dist.shard import ShardedStore
     lake = small_live_lake()
     ll = LiveLake(lake)
     ll.add_table(extra_table(0))
@@ -444,12 +444,14 @@ def test_distributed_loader_accepts_store():
     merged = ll.store.merged_index()
     assert (np.diff(merged.cell_hash.astype(np.int64)) >= 0).all()
     assert 2 not in set(merged.table_id.tolist())
-    assert dist.shard_device_index.__doc__  # segment-aware entry point
-    import jax
-    from jax.sharding import Mesh
-    mesh = Mesh(np.array(jax.devices()[:1]), ("d",))
-    dev = dist.shard_device_index(ll.store, mesh)
-    assert dev["hash"].shape[0] >= merged.n_postings
+    # the sharded coordinator observes the same mutations shard-locally
+    store = ShardedStore(lake, n_shards=2)
+    sl = LiveLake(lake, store=store)
+    sl.add_table(extra_table(0))
+    sl.drop_table(2)
+    assert sorted(sl.live_ids()) == sorted(ll.live_ids())
+    assert store.n_postings == sum(s.n_postings for s in store.shards)
+    assert 2 in store.pending_dead
 
 
 def test_host_counts_live_only_excludes_tombstones():

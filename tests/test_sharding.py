@@ -89,3 +89,87 @@ def test_batch_spec_shards_when_divisible(logd, logm):
     mesh = FakeMesh({"data": 2 ** logd, "model": 2 ** logm})
     spec = batch_spec(mesh, ndim=2)
     assert tuple(spec)[0] in ("data", ("data",))
+
+
+# ---------------------------------------------------------------------------
+# host-side ShardedStore layout (dist/shard.py): table-axis partitioning,
+# global geometry, placement and routing — no device execution needed
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def shard_lake():
+    from repro.core.lake import synthetic_lake
+    return synthetic_lake(n_tables=20, rows=12, cols=3, vocab=200, seed=3)
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+def test_sharded_store_partitions_whole_tables(shard_lake, n_shards):
+    from repro.dist.shard import ShardedStore
+    store = ShardedStore(shard_lake, n_shards=n_shards)
+    # every table owned by exactly one shard, ids global, round-robin
+    owners = {}
+    for i, s in enumerate(store.shards):
+        for tid in s.live_ids():
+            assert tid not in owners, "table on two shards"
+            owners[tid] = i
+    assert sorted(owners) == list(range(20))
+    assert all(owners[g] == g % n_shards for g in owners)
+    assert store.live_ids() == list(range(20))
+    # global geometry imposed identically on every shard
+    assert len({(s.n_tables, s.row_stride, s.max_cols)
+                for s in store.shards}) == 1
+
+
+def test_sharded_store_geometry_matches_single_store(shard_lake):
+    from repro.dist.shard import ShardedStore
+    from repro.store.segments import SegmentStore
+    single = SegmentStore(shard_lake)
+    store = ShardedStore(shard_lake, n_shards=4)
+    assert store.n_tables == single.n_tables
+    assert store.row_stride == single.row_stride
+    assert store.max_cols == single.max_cols
+    assert store.n_postings == single.n_postings
+    assert (store.alive == single.alive).all()
+    assert store.table_names[:20] == single.table_names[:20]
+
+
+def test_sharded_host_counts_sum_to_single_store(shard_lake):
+    from repro.core.hashing import hash_array
+    from repro.dist.shard import ShardedStore
+    from repro.store.segments import SegmentStore
+    h = np.unique(hash_array(list(shard_lake.tables[0].columns[0][:8])))
+    single = SegmentStore(shard_lake)
+    store = ShardedStore(shard_lake, n_shards=4)
+    per = store.host_counts(h, per_shard=True)
+    assert per.shape == (4, len(h))
+    assert (per.sum(axis=0) == single.host_counts(h)).all()
+    assert (store.host_counts(h) == single.host_counts(h)).all()
+
+
+def test_sharded_store_routes_and_reuses_global_ids(shard_lake):
+    from repro.core.lake import Table
+    from repro.dist.shard import ShardedStore
+    store = ShardedStore(shard_lake, n_shards=3)
+    tab = Table("routed", [["a", "b", "c"], [1.0, 2.0, 3.0]])
+    target = store.least_loaded()
+    tid = store.add_table(tab)
+    assert tid == 20                              # fresh global id
+    assert store.owner_of("routed") == target     # least-loaded routing
+    # epoch is a per-shard tuple; only the owner moved
+    assert sum(e != 0 for e in store.epoch) == 1
+    store.drop_table(tid)
+    tid2 = store.add_table(Table("again", [["x", "y"], [0.5, 1.5]]))
+    assert tid2 == tid                            # freed id reused globally
+    with pytest.raises(KeyError):
+        store.owner_of("routed")
+
+
+def test_sharded_store_shape_reports_mesh_layout(shard_lake):
+    from repro.dist.shard import ShardedStore
+    store = ShardedStore(shard_lake, n_shards=2)
+    s = store.shape()
+    assert s["mode"] == "sharded" and s["shards"] == 2
+    assert s["mesh_axes"] == ("shard",)
+    assert len(s["per_shard"]) == 2
+    assert sum(p["postings"] for p in s["per_shard"]) == s["postings"]
+    assert sum(p["live_tables"] for p in s["per_shard"]) == 20

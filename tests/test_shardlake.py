@@ -1,0 +1,221 @@
+"""Sharded-lake execution parity, in-process (device-modulo fallback: with
+one visible CPU device the shards wrap round-robin, so the MPMD layout, the
+per-shard capacity windows and the merge epilogue are all exercised without
+a forced multi-device subprocess — tests/test_distributed.py covers the
+real 8-device mesh).
+
+Contract under test: an n-shard lake is **bit-identical** to a 1-shard lake
+on the same data — across all four seekers, all four combiners, both probe
+backends and both store kinds (static and mutated-live) — and conforms to
+the brute-force oracle.  A hypothesis property interleaves shard-local
+mutations with cached queries and checks every answer against a cold
+n-shard AND a cold 1-shard session.
+"""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+import blend
+from repro.core.lake import Table, synthetic_lake
+from repro.core.plan import Combiners, Plan, Seekers
+from repro.dist.shard import ShardedExecutor, ShardedStore
+from repro.store import LiveLake
+
+from oracle import oracle_ids, oracle_run
+
+N_TABLES = 24
+
+
+@pytest.fixture(scope="module")
+def lake():
+    return synthetic_lake(n_tables=N_TABLES, rows=16, cols=4, vocab=300,
+                          seed=11)
+
+
+def seekers_for(lake, tab=2, k=12):
+    t = lake.tables[tab]
+    return {
+        "sc": Seekers.SC(t.columns[0][:6], k=k),
+        "kw": Seekers.KW([t.columns[1][0], t.columns[1][1]], k=k),
+        "mc": Seekers.MC([(t.columns[0][r], t.columns[1][r])
+                          for r in range(4)], k=k),
+        "c": Seekers.Correlation(t.columns[0][:6],
+                                 [float(i) for i in range(6)], k=k, h=64),
+    }
+
+
+def flat_plan(lake, comb, tab=2):
+    p = Plan()
+    for name, spec in seekers_for(lake, tab).items():
+        p.add(name, spec)
+    if comb == "difference":
+        p.add("ab", Combiners.Intersect(k=16), ["sc", "kw"])
+        p.add("cd", Combiners.Union(k=16), ["mc", "c"])
+        p.add("root", Combiners.Difference(k=8), ["ab", "cd"])
+    else:
+        p.add("root", getattr(Combiners, comb.capitalize())(k=8),
+              ["sc", "kw", "mc", "c"])
+    return p
+
+
+def mutate(ll, lake):
+    """One delta segment + one tombstone (same mutation on every store
+    under comparison, so parity includes segment fan-out and tombstones)."""
+    t = lake.tables[2]
+    ll.add_table(Table("fx_extra", [[f"fx{i}" for i in range(10)],
+                                    [t.columns[0][0]] * 10,
+                                    [float(i) for i in range(10)]]))
+    ll.drop_table(3)
+    return ll
+
+
+def executors(lake, n_shards, backend, live):
+    out = []
+    for n in (1, n_shards):
+        store = ShardedStore(lake, n_shards=n)
+        if live:
+            mutate(LiveLake(lake, store=store, auto_compact=False), lake)
+        out.append(ShardedExecutor(store, backend=backend,
+                                   interpret=backend == "bucket"))
+    return out
+
+
+def assert_parity(ex1, exn, plan):
+    a, ia = ex1.run(plan)
+    b, ib = exn.run(plan)
+    np.testing.assert_array_equal(np.asarray(a.scores), np.asarray(b.scores))
+    np.testing.assert_array_equal(np.asarray(a.mask), np.asarray(b.mask))
+    assert [int(t) for t in a.ids()] == [int(t) for t in b.ids()]
+    assert ia.overflow == 0 and ib.overflow == 0
+    assert ib.launches <= 4 + 1                   # n_kinds + 1, sharded too
+    return ia, ib
+
+
+# --------------------------------------------------------------------------
+# parity: 4 seekers x 4 combiners x both backends x static/live
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("comb", ["intersect", "union", "counter",
+                                  "difference"])
+@pytest.mark.parametrize("live", [False, True], ids=["static", "live"])
+def test_shard_parity_sorted(lake, comb, live):
+    ex1, ex3 = executors(lake, 3, "sorted", live)
+    assert_parity(ex1, ex3, flat_plan(lake, comb))
+
+
+@pytest.mark.parametrize("live", [False, True], ids=["static", "live"])
+def test_shard_parity_bucket_backend(lake, live):
+    ex1, ex2 = executors(lake, 2, "bucket", live)
+    for comb in ("intersect", "union", "counter", "difference"):
+        assert_parity(ex1, ex2, flat_plan(lake, comb))
+
+
+def test_shard_single_seeker_launches(lake):
+    ex1, ex4 = executors(lake, 4, "sorted", live=False)
+    p = Plan()
+    p.add("solo", seekers_for(lake)["sc"])
+    _, ib = assert_parity(ex1, ex4, p)
+    assert ib.launches == 2                       # one group + the DAG top-k
+
+
+# --------------------------------------------------------------------------
+# oracle conformance on a sharded lake
+# --------------------------------------------------------------------------
+
+def test_sharded_matches_oracle(lake):
+    ex = ShardedExecutor(ShardedStore(lake, n_shards=4))
+    for comb in ("intersect", "union", "counter", "difference"):
+        plan = flat_plan(lake, comb)
+        rs, _ = ex.run(plan, optimize=False)
+        scores, mask = oracle_run(lake, plan)
+        assert [int(t) for t in rs.ids()] == oracle_ids(scores, mask)
+        np.testing.assert_allclose(np.asarray(rs.scores)[:N_TABLES], scores,
+                                   rtol=1e-6, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# interleaved mutations + cached queries == cold n-shard == cold 1-shard
+# --------------------------------------------------------------------------
+
+def _extra(i, t):
+    return Table(f"delta{i}", [[f"d{i}_{j}" for j in range(8)],
+                               [t.columns[0][0]] * 8,
+                               [float(j) for j in range(8)]])
+
+
+def _run_trace(lake, ops):
+    """Apply an (op, arg) trace to a cached 3-shard live session, checking
+    every query against cold 3-shard and cold 1-shard replicas of the
+    mutation history so far."""
+    t = lake.tables[2]
+    hot = blend.connect(lake, shards=3, live=True, cache=True)
+    qs = {
+        0: (blend.sc(list(t.columns[0][:6]), k=12)
+            & blend.kw([t.columns[1][0]], k=12)).top(8),
+        1: (blend.sc(list(t.columns[0][:6]), k=12)
+            | blend.kw([t.columns[1][1]], k=12)).top(8),
+        2: blend.mc([(t.columns[0][r], t.columns[1][r])
+                     for r in range(4)], k=12).top(8),
+    }
+    history = []
+    for step, (op, arg) in enumerate(ops):
+        if op == "add":
+            hot.add_table(_extra(step, t))
+            history.append(("add", step))
+        elif op == "drop":
+            live = [i for i in hot.live.live_ids() if i != 2]
+            tid = live[arg % len(live)]
+            hot.drop_table(tid)
+            history.append(("drop", tid))
+        else:
+            q = qs[arg % len(qs)]
+            res = hot.query(q)
+            cold3 = blend.connect(lake, shards=3, live=True)
+            cold1 = blend.connect(lake, shards=1, live=True)
+            for cold in (cold3, cold1):
+                for h_op, h_arg in history:
+                    if h_op == "add":
+                        cold.add_table(_extra(h_arg, t))
+                    else:
+                        cold.drop_table(h_arg)
+            r3, r1 = cold3.query(q), cold1.query(q)
+            for ref in (r3, r1):
+                np.testing.assert_array_equal(np.asarray(res.scores),
+                                              np.asarray(ref.scores))
+                assert res.ids == ref.ids
+            assert res.info.overflow == 0
+
+
+ops_strategy = st.lists(
+    st.tuples(st.sampled_from(["add", "drop", "query"]), st.integers(0, 5)),
+    min_size=2, max_size=6)
+
+
+@settings(max_examples=8, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow,
+                                 HealthCheck.data_too_large])
+@given(ops_strategy)
+def test_shard_mutation_query_property(ops):
+    lake = synthetic_lake(n_tables=N_TABLES, rows=16, cols=4, vocab=300,
+                          seed=11)
+    _run_trace(lake, [op for op in ops] + [("query", 0)])
+
+
+def test_shard_mutation_query_interleaving(lake):
+    """Deterministic instance of the property (runs even where hypothesis
+    is stubbed out): add/drop/query interleavings, cache on."""
+    _run_trace(lake, [("query", 0), ("add", 0), ("query", 0), ("add", 1),
+                      ("drop", 0), ("query", 1), ("query", 0), ("drop", 1),
+                      ("query", 2), ("query", 0)])
+
+
+def test_shard_cache_hits_after_mutation_settles(lake):
+    session = blend.connect(lake, shards=3, live=True, cache=True)
+    t = lake.tables[2]
+    q = (blend.sc(list(t.columns[0][:6]), k=12)
+         & blend.kw([t.columns[1][0]], k=12)).top(8)
+    assert session.query(q).cache.status == "miss"
+    assert session.query(q).cache.status == "hit"
+    session.add_table(_extra(0, t))
+    assert session.query(q).cache.status == "miss"   # epoch tuple moved
+    assert session.query(q).cache.status == "hit"
