@@ -17,7 +17,13 @@ the sharded-lake workloads (benchmarks/sharded_bench.py, run as a
 subprocess under 8 forced host devices): per-device probe throughput and
 ``serve_many`` req/s vs shard count 1/2/4/8, weak-scaling efficiency, and
 the merge-epilogue overhead (acceptance: >= 3x probe throughput at 8
-shards vs 1).
+shards vs 1).  ``BENCH_7.json`` records the serving front-tier workloads
+(benchmarks/serving_bench.py, run as a subprocess so its paced open-loop
+replays get a quiet interpreter): goodput and p50/p99 vs offered load
+under a seeded Zipf/bursty trace, batch-occupancy histograms, shed rate
+at overload, and the query+mutation barrier scenario (acceptance: batched
+goodput >= 3x single-request serving with shedding engaged and bounded
+queues at the heaviest offered load).
 
     PYTHONPATH=src python benchmarks/run_all.py [--out PATH] [--full]
 
@@ -411,6 +417,22 @@ def main(out_path: Path, full: bool = False, iters: int = 10) -> dict:
     else:
         print(f"sharded bench failed (exit {r.returncode}); "
               f"skipping {sharded_path}")
+
+    # serving front tier: also its own process — the load sweep replays
+    # paced traces against a dispatcher thread, and a fresh interpreter
+    # keeps this runner's jit caches and GC pauses out of its latencies.
+    # The full sweep (5 offered-load levels, warm-until-stable per level)
+    # takes minutes; without --full run the CI-sized smoke sweep.
+    serving_path = out_path.parent / "BENCH_7.json"
+    r = subprocess.run(
+        [sys.executable, str(REPO_ROOT / "benchmarks/serving_bench.py"),
+         "--out", str(serving_path)] + ([] if full else ["--smoke"]),
+        check=False)
+    if r.returncode == 0:
+        print(f"wrote {serving_path}")
+    else:
+        print(f"serving bench failed (exit {r.returncode}); "
+              f"skipping {serving_path}")
 
     for name, s in {**workloads, **live, **cache, **fused}.items():
         extra = "".join(

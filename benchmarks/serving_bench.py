@@ -1,0 +1,237 @@
+"""Serving-tier load benchmark (BENCH_7): continuous batching under a
+seeded trace-driven load sweep.
+
+Measures the DiscoveryServer front tier (src/repro/serve/server.py) with
+the trace-driven load generator (src/repro/serve/loadgen.py): goodput and
+p50/p99 latency vs offered load, batch-occupancy histograms, and shed rate
+under overload — plus a mixed query+mutation scenario exercising the
+barrier path.
+
+Baselines (all closed-loop, one request at a time, warm):
+
+* ``single_request_serve`` — ``engine.serve(q)``: the engine's
+  single-request serving path with its default (unfused, node-at-a-time)
+  execution.  This is the acceptance denominator.
+* ``single_request_fused`` — ``engine.serve(q, fused=True)``: the
+  strongest single-request configuration (opt-in fused execution).
+* ``tier_single_request`` — the server with ``max_batch=1``: the tier's
+  own overhead with coalescing disabled.
+
+Every random choice (lake, query pool, Zipf mix, arrivals, mutations)
+derives from ``--seed`` (default 7); the seed is recorded in the JSON.
+
+Warmup: each trace is replayed until a full replay adds no new jit traces
+(``seekers.TRACE_COUNTS``-stable, bounded rounds), so the measured run is
+compile-free — a production server keeps these variants resident.  Probe
+programs are keyed on the store's segment layout, so mutation traces are
+reset (loadgen tables dropped, store compacted) after every round: each
+replay then walks the same segment-layout path the previous one compiled.
+
+    PYTHONPATH=src python benchmarks/serving_bench.py [--out PATH]
+        [--smoke] [--seed N] [--duration S]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+import time
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+for p in (REPO_ROOT, REPO_ROOT / "src"):       # runnable as a plain script
+    if str(p) not in sys.path:
+        sys.path.insert(0, str(p))
+
+import numpy as np
+
+import blend  # noqa: F401  (registers the fluent API used by loadgen)
+from repro.core import seekers as seek
+from repro.core.lake import synthetic_lake
+from repro.serve.engine import DiscoveryEngine
+from repro.serve.loadgen import make_trace, query_pool, replay, zipf_qids
+from repro.serve.server import DiscoveryServer
+
+MAX_BATCH = 32
+ACCEPT_SPEEDUP = 3.0
+
+
+def _closed_loop(fn, stream) -> float:
+    t0 = time.perf_counter()
+    for q in stream:
+        fn(q)
+    return len(stream) / (time.perf_counter() - t0)
+
+
+def _reset(engine, trace):
+    """Undo a mutation trace's leftovers: drop still-alive loadgen tables
+    and fully compact, returning the store to its canonical single-segment
+    state.  Probe programs are keyed on the segment layout, so a replay
+    only revisits the configs the previous round compiled if every round
+    starts from the same state."""
+    if not any(e.kind != "query" for e in trace.events):
+        return
+    live = engine.live
+    for tid, tab in list(live.tables.items()):
+        if getattr(tab, "name", "").startswith("loadgen_"):
+            engine.drop_table(tid)
+    engine.compact(full=True)
+
+
+def _warm_until_stable(engine, make_server, trace, rounds: int) -> int:
+    """Replay (paced, resetting mutations after each round) until a full
+    replay adds no new jit traces or the round budget runs out; returns the
+    rounds used.  Mutation traces never fully converge — batch compositions
+    shift with timing jitter — so the budget bounds the attempt."""
+    for i in range(rounds):
+        before = sum(seek.TRACE_COUNTS.values())
+        srv = make_server()
+        replay(srv, trace)
+        srv.stop()
+        _reset(engine, trace)
+        if sum(seek.TRACE_COUNTS.values()) == before:
+            return i + 1
+    return rounds
+
+
+def main(out_path: Path, *, seed: int = 7, duration_s: float = 2.0,
+         smoke: bool = False) -> dict:
+    n_tables = 40 if smoke else 150
+    n_distinct = 8 if smoke else 24
+    levels = [400.0, 1200.0] if smoke else [250.0, 500.0, 1000.0,
+                                            2000.0, 3000.0]
+    warm_rounds = 2 if smoke else 4
+    base_iters = 120 if smoke else 360
+
+    lake = synthetic_lake(n_tables=n_tables, rows=30, vocab=1200,
+                          seed=seed % 100)
+    engine = DiscoveryEngine(lake, live=True)
+    pool = query_pool(lake, np.random.default_rng(seed),
+                      n_distinct=n_distinct, k=24)
+    rng = np.random.default_rng(seed + 1)
+    stream = [pool[i] for i in zipf_qids(rng, len(pool), base_iters, a=1.1)]
+
+    # ---- warm the single-request paths, then measure the baselines ------
+    for q in pool:
+        engine.serve(q)
+        engine.serve(q, fused=True)
+    baselines = {
+        "single_request_serve_rps": _closed_loop(engine.serve, stream),
+        "single_request_fused_rps": _closed_loop(
+            lambda q: engine.serve(q, fused=True), stream),
+    }
+    srv = DiscoveryServer(engine, max_batch=1)
+    for q in pool:
+        srv.serve(q)
+    baselines["tier_single_request_rps"] = _closed_loop(srv.serve, stream)
+    srv.stop()
+
+    # ---- load sweep: fresh bounded-queue server per offered level -------
+    def mk():
+        return DiscoveryServer(engine, max_batch=MAX_BATCH)
+
+    loads = []
+    for offered in levels:
+        trace = make_trace(lake, seed=seed, duration_s=duration_s,
+                           rate_rps=offered, n_distinct=n_distinct, k=24,
+                           p_mutation=0.0)
+        srv = mk()
+        replay(srv, trace, sleep=lambda s: None)   # compile flood, unpaced
+        srv.stop()
+        rounds = _warm_until_stable(engine, mk, trace, warm_rounds)
+        srv = mk()
+        report = replay(srv, trace)
+        stats = srv.stats()
+        srv.stop()
+        d = report.as_dict()
+        d.update(offered_rps=trace.offered_rps, warm_rounds=rounds,
+                 lane_bounds={ln: s["max_queue"]
+                              for ln, s in stats["lane_occupancy"].items()},
+                 launches_per_batch=stats["launches"]["per_batch_mean"])
+        loads.append(d)
+        print(f"offered {trace.offered_rps:7.0f} rps: goodput "
+              f"{d['goodput_rps']:7.0f} | p50 {d['latency_ms']['p50']:7.1f} "
+              f"p99 {d['latency_ms']['p99']:7.1f} ms | shed "
+              f"{d['shed_rate']:.1%} | batch {d['batch_size_mean']:.1f}")
+
+    # ---- mixed query+mutation scenario (barrier path under load) --------
+    mixed_trace = make_trace(lake, seed=seed + 2, duration_s=duration_s,
+                             rate_rps=levels[0] * 1.5,
+                             n_distinct=n_distinct, k=24, p_mutation=0.02)
+    srv = mk()
+    replay(srv, mixed_trace, sleep=lambda s: None)
+    srv.stop()
+    _reset(engine, mixed_trace)
+    _warm_until_stable(engine, mk, mixed_trace, warm_rounds + 2)
+    srv = mk()
+    mixed_report = replay(srv, mixed_trace)
+    mixed_stats = srv.stats()
+    srv.stop()
+    _reset(engine, mixed_trace)
+    mixed = mixed_report.as_dict()
+    mixed.update(offered_rps=mixed_trace.offered_rps,
+                 mutations_executed=mixed_stats["mutations"]["executed"])
+
+    # ---- acceptance -----------------------------------------------------
+    peak = max(loads, key=lambda d: d["goodput_rps"])
+    overload = max(loads, key=lambda d: d["offered_rps"])
+    single = baselines["single_request_serve_rps"]
+    accept = {
+        "batched_goodput_rps": round(peak["goodput_rps"], 1),
+        "at_offered_rps": round(peak["offered_rps"], 1),
+        "single_request_rps": round(single, 1),
+        "speedup_vs_single_request": round(peak["goodput_rps"] / single, 2),
+        "speedup_vs_fused_single":
+            round(peak["goodput_rps"]
+                  / baselines["single_request_fused_rps"], 2),
+        "speedup_vs_tier_single":
+            round(peak["goodput_rps"]
+                  / baselines["tier_single_request_rps"], 2),
+        "target_speedup": ACCEPT_SPEEDUP,
+        "speedup_ok": peak["goodput_rps"] >= ACCEPT_SPEEDUP * single,
+        # queues are bounded by construction; under the heaviest offered
+        # load shedding (not queueing) absorbs the excess and p99 stays
+        # within the bound implied by queue depth / service rate
+        "shed_engaged_at_overload": overload["shed_rate"] > 0.0,
+        "overload_shed_rate": round(overload["shed_rate"], 3),
+        "overload_p99_ms": round(overload["latency_ms"]["p99"], 1),
+        "queue_bounds": overload["lane_bounds"],
+    }
+    payload = {
+        "bench": "BENCH_7",
+        "seed": seed,
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "smoke": smoke,
+        "config": {
+            "n_tables": n_tables, "rows": 30, "vocab": 1200,
+            "n_distinct_queries": n_distinct, "zipf_a": 1.1,
+            "max_batch": MAX_BATCH, "duration_s": duration_s,
+            "store": "live", "fused": True,
+            "note": "all randomness (lake, pool, mix, arrivals, mutations) "
+                    "derives from 'seed'",
+        },
+        "baselines": {k: round(v, 1) for k, v in baselines.items()},
+        "loads": loads,
+        "mixed_mutations": mixed,
+        "acceptance": accept,
+    }
+    out_path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {out_path}")
+    print(f"baselines: " + "  ".join(f"{k}={v:.0f}"
+                                     for k, v in baselines.items()))
+    print(f"acceptance: {accept}")
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", type=Path, default=REPO_ROOT / "BENCH_7.json")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--duration", type=float, default=2.0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small lake / short traces for CI")
+    args = ap.parse_args()
+    main(args.out, seed=args.seed, duration_s=args.duration,
+         smoke=args.smoke)

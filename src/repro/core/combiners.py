@@ -19,13 +19,21 @@ class ResultSet:
     scores: jnp.ndarray          # f32 [n_tables]
     mask: jnp.ndarray            # bool [n_tables]
 
+    @staticmethod
+    def rank(s, m):
+        """Rank host-side (scores, mask) arrays: selected ids, score desc.
+        The single ranking implementation — ``ids`` and batched response
+        materialization (serve_many) both route through it, so they cannot
+        diverge."""
+        ids = np.nonzero(m)[0]
+        return ids[np.argsort(-s[ids], kind="stable")]
+
     def ids(self):
         """Selected table ids sorted by score desc (host-side; scores and
         mask come back in a single device transfer)."""
         s, m = (np.asarray(a) for a in
                 jax.device_get((self.scores, self.mask)))
-        ids = np.nonzero(m)[0]
-        return ids[np.argsort(-s[ids], kind="stable")]
+        return self.rank(s, m)
 
 
 def topk_result(scores, k: int) -> ResultSet:

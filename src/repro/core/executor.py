@@ -66,6 +66,8 @@ class ExecInfo:
     # seeker runs, so it keeps its share.
     cached_nodes: list = field(default_factory=list)
     seeker_runs: int = 0
+    #: memoized ``overflow`` total (None until first read / batch fetch)
+    _overflow: int | None = None
     # device-program dispatch count: every jitted seeker call (compaction
     # stages included) and every combiner node counts one on the unfused
     # path; the fused path counts its group launches + the single DAG
@@ -82,16 +84,33 @@ class ExecInfo:
         # reading this synchronizes on the dispatched seekers; all parts are
         # fetched in ONE device transfer (a part may be a per-seeker scalar
         # or a fused group's stacked OverflowSlice)
-        if not self.overflow_parts:
-            return 0
-        raw = jax.device_get([p.vec if isinstance(p, OverflowSlice) else p
-                              for p in self.overflow_parts])
-        total = 0
-        for p, r in zip(self.overflow_parts, raw):
-            a = np.asarray(r)    # sharded slice: [n_shards, n_seekers_p]
-            total += int(a[..., p.rows].sum() if isinstance(p, OverflowSlice)
-                         else a.sum())
-        return total
+        if self._overflow is None:
+            ExecInfo.materialize_overflow([self])
+        return self._overflow
+
+    @staticmethod
+    def materialize_overflow(infos):
+        """Resolve many infos' overflow totals in ONE device transfer,
+        deduping shared vectors (a fused group's stacked overflow vector is
+        shared by every plan in a serve_many batch).  Per-response fetches
+        are a measurable share of the warm batched serving path."""
+        todo = [i for i in infos if i._overflow is None]
+        vecs: dict = {}
+        for i in todo:
+            for p in i.overflow_parts:
+                v = p.vec if isinstance(p, OverflowSlice) else p
+                vecs.setdefault(id(v), v)
+        raw = jax.device_get(list(vecs.values())) if vecs else []
+        host = {k: np.asarray(a) for k, a in zip(vecs, raw)}
+        for i in todo:
+            total = 0
+            for p in i.overflow_parts:
+                if isinstance(p, OverflowSlice):
+                    # sharded slice: vec is [n_shards, n_seekers_p]
+                    total += int(host[id(p.vec)][..., p.rows].sum())
+                else:
+                    total += int(host[id(p)].sum())
+            i._overflow = total
 
 
 def _pow2_at_least(n: int, lo: int = 8, hi: int = 1024) -> int:

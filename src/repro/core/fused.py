@@ -291,7 +291,13 @@ def _launch_group(ex, key, tasks):
     for i, t in enumerate(tasks):
         t.row = i
     kind = key[0]
-    nsp = _pow2(len(tasks), lo=1)
+    # lo=8: a serving batch's per-kind seeker count varies with every batch
+    # composition; padding the stacked output to at least 8 rows collapses
+    # nsp (and with it the DAG program's group-matrix input shapes) onto a
+    # couple of buckets, so reshuffled batches stop retracing.  The padding
+    # itself is dead rows in a [nsp, n_tables] matrix — negligible next to
+    # the probe work, and single-plan latency is unaffected (measured).
+    nsp = _pow2(len(tasks), lo=8)
     spans = []
 
     def fill_caps(caps, shard):
@@ -475,6 +481,16 @@ def _run_dag(group_scores, rows, cached_scores, cached_masks, *, prog):
 # driver
 # --------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=None)
+def _empty_cached(n_tables: int):
+    """Shared zero-width placeholder inputs for plans with no cached
+    seekers — built eagerly once per table count instead of dispatching two
+    ``jnp.zeros`` device programs per plan per batch (a measurable share of
+    the warm serve_many hot path)."""
+    return (jnp.zeros((0, n_tables), jnp.float32),
+            jnp.zeros((0, n_tables), bool))
+
+
 def run_fused(ex, plans, optimize=True, cost_model=None, cache=None):
     """Execute ``plans`` (one or a whole serve_many batch) on the fused
     path; returns [(ResultSet, ExecInfo)] aligned with ``plans``.  The
@@ -526,8 +542,7 @@ def run_fused(ex, plans, optimize=True, cost_model=None, cache=None):
             cs = jnp.stack([c.result.scores for c in pr.cached])
             cm = jnp.stack([c.result.mask for c in pr.cached])
         else:
-            cs = jnp.zeros((0, ex.n_tables), jnp.float32)
-            cm = jnp.zeros((0, ex.n_tables), bool)
+            cs, cm = _empty_cached(ex.n_tables)
         t0 = time.perf_counter()
         regs = _run_dag(gs, rows, cs, cm, prog=tuple(pr.instrs))
         dag_s = time.perf_counter() - t0

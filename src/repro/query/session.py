@@ -65,6 +65,19 @@ class QueryResult:
                 self._entry.ids = self._ids
         return self._ids
 
+    def materialize(self, scores_np, mask_np) -> list:
+        """Install ids from already-fetched host arrays (``serve_many``
+        fetches a whole batch's (scores, mask) pairs in one transfer).
+        Ranking goes through ``ResultSet.rank`` — the same code path the
+        lazy ``ids`` property uses — and the cache-entry write-back
+        semantics match it exactly."""
+        if self._ids is None:
+            from repro.core.combiners import ResultSet
+            self._ids = [int(t) for t in ResultSet.rank(scores_np, mask_np)]
+            if self._entry is not None and self._entry.ids is None:
+                self._entry.ids = self._ids
+        return self._ids
+
     @property
     def applied_rules(self):
         return self.compiled.applied_rules
@@ -85,6 +98,7 @@ class Explain:
     launches: int = 0                 # device-program dispatches (ExecInfo)
     index_shape: dict = field(default_factory=dict)   # live-lake observability
     cache: dict = field(default_factory=dict)         # query-cache telemetry
+    server: dict = field(default_factory=dict)        # front-tier telemetry
 
     def __str__(self):
         lines = ["== logical plan =="]
@@ -124,6 +138,26 @@ class Explain:
             lines.append(f"  entries: {c['entries']}   bytes: {c['bytes']}   "
                          f"evictions: {c['evictions']}   "
                          f"invalidations: {c['invalidations']}")
+        if self.server:
+            s = self.server
+            depth = s["queue_depth"]
+            lines.append("== server ==")
+            lines.append(
+                "  queue depth: "
+                + "   ".join(f"{k}: {v}" for k, v in depth.items()))
+            occ = s["lane_occupancy"]
+            lines.append(
+                "  lane occupancy: "
+                + "   ".join(f"{k}: {v['depth']}/{v['max_queue']}"
+                             for k, v in occ.items()))
+            lines.append(f"  served: {s['served']}   "
+                         f"shed: {s['shed']['total']} "
+                         f"(rate_limit: {s['shed'].get('rate_limit', 0)}, "
+                         f"queue_full: {s['shed'].get('queue_full', 0)})")
+            lines.append(f"  batches: {s['batches']['formed']}   "
+                         f"mean size: {s['batches']['mean_size']:.2f}   "
+                         f"launches/batch: "
+                         f"{s['launches']['per_batch_mean']:.2f}")
         lines.append("== physical order (ranked execution groups) ==")
         if self.physical_order:
             for comb, seekers in self.physical_order.items():
@@ -161,6 +195,7 @@ class Session:
         self.cost_model = cost_model
         self.live = live                  # LiveLake handle or None
         self.cache = cache                # serve.cache.QueryCache or None
+        self._plan_memo = {}              # cache-off compile memo (bounded)
 
     @property
     def index(self):
@@ -221,9 +256,10 @@ class Session:
         (strings and expressions are hashable; compilation is
         index-independent, so plan entries survive epoch changes)."""
         plan_key = None
-        if self.cache is not None and isinstance(q, (str, L.Expr)):
+        if isinstance(q, (str, L.Expr)):
             plan_key = (q, top)
-            got = self.cache.get_plan(plan_key)
+            got = self.cache.get_plan(plan_key) if self.cache is not None \
+                else self._plan_memo.get(plan_key)
             if got is not None:
                 return got
         if isinstance(q, str):
@@ -246,7 +282,16 @@ class Session:
                             applied_rules=list(rewritten.applied),
                             node_of=node_of)
         if plan_key is not None:
-            self.cache.put_plan(plan_key, compiled)
+            if self.cache is not None:
+                self.cache.put_plan(plan_key, compiled)
+            else:
+                # compilation is index-independent (same contract the cache
+                # path relies on), so a cache-off session can still memoize
+                # hot-query plans — this keeps rewrite+lower off the warm
+                # serving path.  FIFO-bounded: serving mixes are small.
+                if len(self._plan_memo) >= 512:
+                    self._plan_memo.pop(next(iter(self._plan_memo)))
+                self._plan_memo[plan_key] = compiled
         return compiled
 
     # ---------------------------------------------------------------- execute
@@ -378,12 +423,16 @@ class Session:
 
     # ---------------------------------------------------------------- explain
     def explain(self, q, top: int | None = None, optimize: bool = True,
-                execute: bool = True, fused: bool = False) -> Explain:
+                execute: bool = True, fused: bool = False,
+                server: dict | None = None) -> Explain:
         """Compile (and by default run) ``q``; returns the full transcript:
         rendered logical tree, applied rewrite rules, ranked physical order,
         and per-node timings from the actual execution.  ``fused=True``
         executes on the fused path — the transcript's ``launches`` line then
-        shows the collapsed dispatch count (<= n_kinds + 1)."""
+        shows the collapsed dispatch count (<= n_kinds + 1).  ``server=``
+        attaches front-tier telemetry (``DiscoveryServer.stats()``) rendered
+        as the ``== server ==`` section — queue depth, lane occupancy, shed
+        counts, launches per batch."""
         compiled = q if isinstance(q, Compiled) else self.compile(q, top=top)
         if compiled.logical is not None:
             tree = compiled.logical.render()
@@ -410,7 +459,8 @@ class Session:
                        node_seconds=dict(info.node_seconds),
                        overflow=info.overflow if execute else 0, ids=ids,
                        launches=info.launches,
-                       index_shape=self.index_shape(), cache=cache_info)
+                       index_shape=self.index_shape(), cache=cache_info,
+                       server=dict(server) if server else {})
 
 
 def _make_cache(cache):

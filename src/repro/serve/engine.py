@@ -12,6 +12,7 @@ from dataclasses import dataclass, field
 import jax
 import numpy as np
 
+from repro.core.executor import ExecInfo
 from repro.query.session import connect
 from repro.train.step import make_prefill_step, make_serve_step
 
@@ -56,6 +57,16 @@ class DiscoveryResponse:
     # hit/partial/miss, seekers served vs run, resident entries/bytes,
     # evictions and epoch invalidations.  None when the cache is disabled.
     cache: dict | None = None
+    # front-tier telemetry (serve/server.py): time spent queued before the
+    # batch dispatched, and how many requests were coalesced into that
+    # batch.  Direct serve/serve_many calls keep the defaults (no queue,
+    # batch of one).
+    queue_seconds: float = 0.0
+    batch_size: int = 1
+    # dense f32 [n_tables] score vector (host-side copy) — the full ranking
+    # evidence behind table_ids; server parity tests assert it bit-identical
+    # between batched and sequential serving
+    scores: object = None
 
     @property
     def total_node_seconds(self) -> float:
@@ -134,7 +145,11 @@ class DiscoveryEngine:
         self.session.cost_model = model
 
     @staticmethod
-    def _response(res, seconds: float) -> DiscoveryResponse:
+    def _response(res, seconds: float, scores_np=None) -> DiscoveryResponse:
+        if scores_np is None:
+            scores_np, mask_np = (np.asarray(a) for a in jax.device_get(
+                (res.scores, res.result.mask)))
+            res.materialize(scores_np, mask_np)
         return DiscoveryResponse(table_ids=res.ids, seconds=seconds,
                                  plan_nodes=len(res.compiled.plan.nodes),
                                  node_seconds=dict(res.info.node_seconds),
@@ -143,7 +158,8 @@ class DiscoveryEngine:
                                  launches=res.info.launches,
                                  applied_rules=list(res.applied_rules),
                                  cache=res.cache.as_dict()
-                                 if res.cache is not None else None)
+                                 if res.cache is not None else None,
+                                 scores=scores_np)
 
     def serve(self, query, optimize: bool = True,
               fused: bool = False) -> DiscoveryResponse:
@@ -197,7 +213,17 @@ class DiscoveryEngine:
         t0 = time.perf_counter()
         jax.block_until_ready([res.scores for res in hot])
         drain_share = (time.perf_counter() - t0) / max(len(hot), 1)
-        return [self._response(
-                    res, dispatch_s + (drain_share if self._dispatched(res)
-                                       else 0.0))
-                for res, dispatch_s in pending]
+        # one host transfer for the whole batch's (scores, mask) pairs —
+        # per-response device_get round-trips are a measurable share of the
+        # warm batched path
+        fetched = jax.device_get([(res.scores, res.result.mask)
+                                  for res, _ in pending])
+        ExecInfo.materialize_overflow([res.info for res, _ in pending])
+        out = []
+        for (res, dispatch_s), (s, m) in zip(pending, fetched):
+            s, m = np.asarray(s), np.asarray(m)
+            res.materialize(s, m)
+            out.append(self._response(
+                res, dispatch_s + (drain_share if self._dispatched(res)
+                                   else 0.0), scores_np=s))
+        return out

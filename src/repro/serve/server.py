@@ -1,0 +1,403 @@
+"""DiscoveryServer: the async serving front tier over a DiscoveryEngine.
+
+The engine (serve/engine.py) is a synchronous in-process object; the fused
+path makes ``serve_many`` ~8x cheaper per request than one-at-a-time
+``serve`` — but only if something assembles batches from concurrent
+traffic.  This module is that something::
+
+    server = DiscoveryServer(DiscoveryEngine(lake, live=True))
+    fut = server.submit(expr, lane="interactive", tenant="alice")
+    resp = fut.result()        # DiscoveryResponse | Overloaded
+
+Requests enter through ``submit`` (thread-safe, returns a
+``concurrent.futures.Future``) and are coalesced by the clock-injectable
+:class:`~repro.serve.batching.BatchFormer`: requests arriving within a
+lane's batching window form one fused ``serve_many`` call, so responses are
+**bit-identical to sequential ``serve``** (table ids and scores) — the
+fused batch path already guarantees per-request parity, and mutation
+barriers guarantee each query observes the same epoch a sequential
+arrival-order execution would have shown it.
+
+Serving policy, not just a queue:
+
+* **priority lanes** — ``interactive`` dispatches before ``batch`` within
+  every formed batch; each lane has its own coalescing window.
+* **per-tenant rate limits** — token buckets shed excess traffic at
+  admission with a typed :class:`Overloaded` (``reason='rate_limit'``)
+  carrying ``retry_after_s``.
+* **backpressure / load shedding** — lane queues are bounded; beyond
+  ``max_queue`` requests are rejected with ``Overloaded('queue_full')``
+  rather than queued unboundedly, so queue depth (and therefore p99) stays
+  bounded under any offered load.
+* **mutation barriers** — ``add_table`` / ``drop_table`` / ``compact`` are
+  serialized as barrier ops: a mutation waits for every earlier query to
+  dispatch, later queries wait for it, and the whole batch executes under
+  ``LiveLake.barrier()`` so one consistent epoch is pinned per batch.
+
+One dispatcher thread owns the engine (jit caches and the executor's
+epoch-refresh are not thread-safe); ``explain`` and direct engine access
+take the same engine lock.  ``AsyncDiscoveryServer`` is the asyncio façade:
+the same futures awaited via ``asyncio.wrap_future``.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+from contextlib import nullcontext
+from dataclasses import dataclass
+
+from repro.serve.batching import (BATCH, INTERACTIVE, SHED_RATE_LIMIT,
+                                  BatchFormer, Barrier, Batch, LaneConfig,
+                                  RateLimiter)
+from repro.serve.engine import DiscoveryEngine
+
+
+@dataclass
+class Overloaded:
+    """Typed rejection: the admission controller shed this request instead
+    of queueing it unboundedly.  ``reason`` is ``'rate_limit'`` (tenant
+    bucket empty; retry after ``retry_after_s``) or ``'queue_full'`` (lane
+    backpressure).  ``ok`` distinguishes it from DiscoveryResponse without
+    isinstance checks at call sites that only care about success."""
+    reason: str
+    lane: str
+    tenant: str
+    retry_after_s: float | None = None
+    ok: bool = False
+
+
+@dataclass
+class _QueryJob:
+    query: object
+    future: Future
+    optimize: bool
+
+
+@dataclass
+class _MutationJob:
+    op: str                       # 'add_table' | 'drop_table' | 'compact'
+    args: tuple
+    kwargs: dict
+    future: Future
+
+
+class DiscoveryServer:
+    """Continuous-batching front tier (see module docstring).
+
+    Parameters mirror the policy surface: ``max_batch`` bounds coalescing,
+    ``interactive_window_s`` / ``batch_window_s`` are the per-lane windows,
+    ``max_queue`` / ``batch_max_queue`` bound the lanes (backpressure),
+    ``rate`` / ``burst`` / ``per_tenant`` configure token buckets
+    (``rate=None``: unlimited), ``optimize`` / ``fused`` set the engine
+    defaults.  ``start=False`` leaves the dispatcher parked (deterministic
+    queue tests); ``now`` injects the clock for admission decisions."""
+
+    def __init__(self, engine, *, max_batch: int = 16,
+                 interactive_window_s: float = 0.002,
+                 batch_window_s: float = 0.010,
+                 max_queue: int = 256, batch_max_queue: int = 1024,
+                 mutation_max_queue: int = 256,
+                 rate: float | None = None, burst: float | None = None,
+                 per_tenant: dict | None = None,
+                 optimize: bool = True, fused: bool = True,
+                 start: bool = True, now=time.monotonic):
+        self.engine = engine if isinstance(engine, DiscoveryEngine) \
+            else DiscoveryEngine(engine)
+        self.optimize, self.fused = optimize, fused
+        self._now = now
+        self._former = BatchFormer(
+            max_batch=max_batch,
+            lanes={INTERACTIVE: LaneConfig(interactive_window_s, max_queue),
+                   BATCH: LaneConfig(batch_window_s, batch_max_queue)},
+            mutation_max_queue=mutation_max_queue)
+        self._limiter = RateLimiter(rate, burst, per_tenant, now=now)
+        self._cond = threading.Condition()
+        self._engine_lock = threading.Lock()
+        self._stopping = False
+        #: dispatcher sleep state (guarded by _cond): None while it is
+        #: processing or between polls, else the absolute deadline it sleeps
+        #: toward (inf for an idle wait).  submit uses it to wake the
+        #: dispatcher only when an arrival changes its plan.
+        self._sleep_deadline: float | None = None
+        self._served = 0
+        self._mutations_done = 0
+        self._launches_total = 0
+        self._launches_last_batch = 0
+        self._thread: threading.Thread | None = None
+        if start:
+            self.start()
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self):
+        if self._thread is not None and self._thread.is_alive():
+            return self
+        self._stopping = False
+        self._thread = threading.Thread(target=self._loop,
+                                        name="discovery-server", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self, drain: bool = True, timeout: float | None = 30.0):
+        """Stop the dispatcher; with ``drain`` (default) every admitted
+        request is served first — futures never dangle."""
+        with self._cond:
+            self._stopping = True
+            if not drain:
+                while True:
+                    work = self._former.poll(float("inf"))
+                    if work is None:
+                        break
+                    reqs = work.requests if isinstance(work, Batch) \
+                        else [work.request]
+                    for p in reqs:
+                        p.payload.future.cancel()
+            self._cond.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout=timeout)
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+
+    # ------------------------------------------------------------ admission
+    def submit(self, query, *, lane: str = INTERACTIVE,
+               tenant: str = "default", optimize: bool | None = None
+               ) -> Future:
+        """Admit one query; returns a Future resolving to a
+        ``DiscoveryResponse`` or, when shed, an :class:`Overloaded` (the
+        future itself never raises for overload — shedding is a response,
+        not an error)."""
+        fut: Future = Future()
+        job = _QueryJob(query, fut,
+                        self.optimize if optimize is None else optimize)
+        with self._cond:
+            now = self._now()
+            ok, retry = self._limiter.admit(tenant, now=now)
+            if not ok:
+                fut.set_result(Overloaded(SHED_RATE_LIMIT, lane, tenant,
+                                          retry_after_s=retry))
+                return fut
+            pending, reason = self._former.submit(job, lane=lane,
+                                                  tenant=tenant, now=now)
+            if pending is None:
+                fut.set_result(Overloaded(reason, lane, tenant))
+                return fut
+            self._wake(now + self._former.lanes[lane].window_s)
+        return fut
+
+    def serve(self, query, **kw):
+        """Synchronous convenience: submit + wait."""
+        return self.submit(query, **kw).result()
+
+    def _submit_mutation(self, op: str, *args, **kwargs) -> Future:
+        fut: Future = Future()
+        job = _MutationJob(op, args, kwargs, fut)
+        with self._cond:
+            now = self._now()
+            pending, reason = self._former.submit(job, kind="mutation",
+                                                  now=now)
+            if pending is None:
+                fut.set_result(Overloaded(reason, BatchFormer.MUTATION_LANE,
+                                          "default"))
+                return fut
+            self._wake(now)           # a barrier cuts every window short
+        return fut
+
+    def _wake(self, deadline: float):
+        """Wake the dispatcher only when this arrival changes its plan: it
+        is sleeping AND (the arrival's window deadline is earlier than the
+        one it sleeps toward, or a full batch is probably ready).  Waking on
+        every submit would make the dispatcher rescan its queues once per
+        admitted request — an O(depth) cost that caps goodput well below
+        the fused engine's capacity at saturating offered load.  Caller
+        holds ``_cond``."""
+        sd = self._sleep_deadline
+        if sd is None:                # processing: it re-polls on its own
+            return
+        if deadline < sd or \
+                sum(self._former.depth().values()) >= self._former.max_batch:
+            self._cond.notify()
+
+    def add_table(self, table, name: str | None = None) -> Future:
+        """Enqueue a barrier mutation; the future resolves to the table id
+        once every earlier query has been served at the old epoch."""
+        return self._submit_mutation("add_table", table, name=name)
+
+    def drop_table(self, ref) -> Future:
+        return self._submit_mutation("drop_table", ref)
+
+    def compact(self, **kw) -> Future:
+        return self._submit_mutation("compact", **kw)
+
+    # ------------------------------------------------------------ dispatcher
+    def _loop(self):
+        while True:
+            with self._cond:
+                while True:
+                    # when stopping, flush every open window (drain): poll
+                    # at t=inf closes all of them, so no future dangles
+                    now = float("inf") if self._stopping else self._now()
+                    work = self._former.poll(now)
+                    if work is not None:
+                        break
+                    if self._stopping:
+                        return
+                    deadline = self._former.next_deadline(self._now())
+                    timeout = None if deadline is None \
+                        else max(deadline - self._now(), 0.0)
+                    self._sleep_deadline = float("inf") if deadline is None \
+                        else deadline
+                    self._cond.wait(timeout=timeout)
+                    self._sleep_deadline = None
+            if isinstance(work, Batch):
+                self._run_batch(work)
+            else:
+                self._run_barrier(work)
+
+    def _epoch_barrier(self):
+        """Pin one consistent epoch for a whole engine call: hold the
+        LiveLake mutation barrier so nothing (server mutations run on this
+        same thread; direct user mutations run anywhere) can move the store
+        epoch while a batch is in flight."""
+        live = self.engine.live
+        return live.barrier() if live is not None else nullcontext()
+
+    def _run_batch(self, batch: Batch):
+        start = self._now()
+        jobs = [p.payload for p in batch.requests]
+        try:
+            with self._engine_lock, self._epoch_barrier():
+                responses: list = [None] * len(jobs)
+                # per-request optimize overrides partition the batch; each
+                # partition is still one fused serve_many call
+                by_opt: dict = {}
+                for i, job in enumerate(jobs):
+                    by_opt.setdefault(job.optimize, []).append(i)
+                for opt, idxs in by_opt.items():
+                    out = self.engine.serve_many(
+                        [jobs[i].query for i in idxs], optimize=opt,
+                        fused=self.fused)
+                    for i, resp in zip(idxs, out):
+                        responses[i] = resp
+        except BaseException as e:                   # noqa: BLE001
+            for job in jobs:
+                if not job.future.done():
+                    job.future.set_exception(e)
+            return
+        self._launches_last_batch = max(r.launches for r in responses)
+        self._launches_total += self._launches_last_batch
+        for p, job, resp in zip(batch.requests, jobs, responses):
+            resp.queue_seconds = max(start - p.enqueue_s, 0.0)
+            resp.batch_size = len(batch.requests)
+            self._served += 1
+            if not job.future.cancelled():
+                job.future.set_result(resp)
+
+    def _run_barrier(self, barrier: Barrier):
+        job = barrier.request.payload
+        try:
+            with self._engine_lock:
+                out = getattr(self.engine, job.op)(*job.args, **job.kwargs)
+        except BaseException as e:                   # noqa: BLE001
+            if not job.future.done():
+                job.future.set_exception(e)
+            return
+        self._mutations_done += 1
+        if not job.future.cancelled():
+            job.future.set_result(out)
+
+    # ------------------------------------------------------------ inspection
+    @property
+    def session(self):
+        return self.engine.session
+
+    def stats(self) -> dict:
+        """Serving telemetry: queue depth and occupancy per lane, shed
+        counts by reason/lane/tenant, batch-size histogram, aggregate
+        launches per batch, mutation counters."""
+        with self._cond:
+            f = self._former
+            s = f.stats
+            depth = f.depth()
+            occupancy = {
+                name: {"depth": depth[name], "max_queue": cfg.max_queue,
+                       "utilization": depth[name] / cfg.max_queue}
+                for name, cfg in f.lanes.items()}
+            rate_sheds = sum(self._limiter.sheds.values())
+            queue_sheds = sum(s.shed.values())
+            batches = max(s.batches, 1)
+            return {
+                "running": self._thread is not None
+                and self._thread.is_alive(),
+                "served": self._served,
+                "queue_depth": depth,
+                "lane_occupancy": occupancy,
+                "shed": {SHED_RATE_LIMIT: rate_sheds, **s.shed,
+                         "total": rate_sheds + queue_sheds,
+                         "by_lane": {k: dict(v)
+                                     for k, v in s.shed_by_lane.items()},
+                         "by_tenant": dict(self._limiter.sheds)},
+                "batches": {"formed": s.batches,
+                            "requests": s.batched_requests,
+                            "mean_size": s.batched_requests / batches,
+                            "size_hist": {str(k): v for k, v in
+                                          sorted(s.batch_size_hist.items())}},
+                "launches": {"total": self._launches_total,
+                             "per_batch_mean":
+                                 self._launches_total / batches,
+                             "last_batch": self._launches_last_batch},
+                "mutations": {"executed": self._mutations_done,
+                              "pending": depth[f.MUTATION_LANE]},
+            }
+
+    def explain(self, query, **kw):
+        """``session.explain`` with the server's stats attached (rendered as
+        the ``== server ==`` section).  Takes the engine lock: the explain
+        runs between batches, never concurrently with one."""
+        with self._engine_lock, self._epoch_barrier():
+            return self.session.explain(query, server=self.stats(), **kw)
+
+
+class AsyncDiscoveryServer:
+    """Asyncio façade over :class:`DiscoveryServer`: the same thread-based
+    queue underneath, awaited via ``asyncio.wrap_future``::
+
+        async with AsyncDiscoveryServer(engine) as server:
+            resp = await server.serve(expr, tenant="alice")
+
+    Wraps an existing server or constructs one from the same kwargs."""
+
+    def __init__(self, engine_or_server, **kw):
+        self.server = engine_or_server \
+            if isinstance(engine_or_server, DiscoveryServer) \
+            else DiscoveryServer(engine_or_server, **kw)
+
+    async def serve(self, query, **kw):
+        import asyncio
+        return await asyncio.wrap_future(self.server.submit(query, **kw))
+
+    async def add_table(self, table, name: str | None = None):
+        import asyncio
+        return await asyncio.wrap_future(self.server.add_table(table,
+                                                               name=name))
+
+    async def drop_table(self, ref):
+        import asyncio
+        return await asyncio.wrap_future(self.server.drop_table(ref))
+
+    async def compact(self, **kw):
+        import asyncio
+        return await asyncio.wrap_future(self.server.compact(**kw))
+
+    def stats(self) -> dict:
+        return self.server.stats()
+
+    async def __aenter__(self):
+        self.server.start()
+        return self
+
+    async def __aexit__(self, *exc):
+        self.server.stop()

@@ -21,13 +21,23 @@ a dispatched plan.
 """
 from __future__ import annotations
 
+import threading
+from contextlib import contextmanager
+
 from repro.store.compact import CompactionPolicy, compact_store, maybe_compact
 from repro.store.segments import SegmentStore
 from repro.store import snapshot as snap
 
 
 class LiveLake:
-    """Mutable lake handle: tables in, tables out, index stays resident."""
+    """Mutable lake handle: tables in, tables out, index stays resident.
+
+    Mutations are serialized under an internal reentrant barrier lock:
+    concurrent ``add_table`` / ``drop_table`` / ``compact`` calls (a serving
+    tier's mutation queue plus direct user calls) never interleave inside
+    the store, and a reader holding :meth:`barrier` pins the epoch — the
+    DiscoveryServer wraps each coalesced batch dispatch in it so every batch
+    observes exactly one consistent index epoch."""
 
     def __init__(self, lake=None, *, bucket_bits: int = 12, seed: int = 0,
                  policy: CompactionPolicy | None = None,
@@ -36,6 +46,7 @@ class LiveLake:
             lake, bucket_bits=bucket_bits, seed=seed)
         self.policy = policy or CompactionPolicy()
         self.auto_compact = auto_compact
+        self._barrier = threading.RLock()
         #: tid -> Table registry for live tables (examples / parity tests;
         #: empty after ``restore`` — snapshots persist arrays, not cells)
         self.tables = {t: tab for t, tab in
@@ -46,37 +57,53 @@ class LiveLake:
     def epoch(self) -> int:
         return self.store.epoch
 
+    @contextmanager
+    def barrier(self):
+        """Hold the mutation barrier: while the context is open the store
+        epoch cannot move (mutations block), so a whole batch of queries
+        dispatches against one consistent index.  Reentrant — a mutation
+        running under the server's barrier does not deadlock itself."""
+        with self._barrier:
+            yield self
+
     def add_table(self, table, name: str | None = None) -> int:
-        tid = self.store.add_table(table, name=name)
-        self.tables[tid] = table
-        if self.auto_compact:
-            if hasattr(self.store, "shards"):    # sharded: per-shard tiers
-                self.store.maybe_compact(self.policy)
-            else:
-                maybe_compact(self.store, self.policy)
-        return tid
+        with self._barrier:
+            tid = self.store.add_table(table, name=name)
+            self.tables[tid] = table
+            if self.auto_compact:
+                if hasattr(self.store, "shards"):   # sharded: per-shard tiers
+                    self.store.maybe_compact(self.policy)
+                else:
+                    maybe_compact(self.store, self.policy)
+            return tid
 
     def drop_table(self, ref) -> int:
-        tid = self.store.drop_table(ref)
-        self.tables.pop(tid, None)
-        return tid
+        with self._barrier:
+            tid = self.store.drop_table(ref)
+            self.tables.pop(tid, None)
+            return tid
 
     def compact(self, full: bool = True, reclaim_ids: bool = False):
         """Explicit compaction; with ``reclaim_ids`` returns the old->new
         table-id mapping (and re-keys the Table registry)."""
-        if hasattr(self.store, "shards"):        # sharded: shard-local merges
-            return self.store.compact(self.policy, full=full,
-                                      reclaim_ids=reclaim_ids)
-        remap = compact_store(self.store, self.policy, full=full,
-                              reclaim_ids=reclaim_ids)
-        if remap is not None:
-            self.tables = {remap[t]: tab for t, tab in self.tables.items()
-                           if t in remap}
-        return remap
+        with self._barrier:
+            if hasattr(self.store, "shards"):    # sharded: shard-local merges
+                return self.store.compact(self.policy, full=full,
+                                          reclaim_ids=reclaim_ids)
+            remap = compact_store(self.store, self.policy, full=full,
+                                  reclaim_ids=reclaim_ids)
+            if remap is not None:
+                self.tables = {remap[t]: tab for t, tab in
+                               self.tables.items() if t in remap}
+            return remap
 
     # ----------------------------------------------------------- persistence
     def snapshot(self, path):
         """Save the compacted live index; returns the manifest path."""
+        with self._barrier:
+            return self._snapshot(path)
+
+    def _snapshot(self, path):
         if hasattr(self.store, "shards"):
             raise NotImplementedError(
                 "snapshots of sharded lakes are not supported yet: "

@@ -1,0 +1,235 @@
+"""Deterministic-clock tests for the serving front tier's policy core:
+TokenBucket / RateLimiter refill and shed decisions, BatchFormer window
+close, lane priority, bounded-queue backpressure, and mutation barriers —
+all driven with explicit ``now`` values, no threads, no sleeps."""
+import pytest
+
+from repro.serve.batching import (BATCH, INTERACTIVE, SHED_QUEUE_FULL,
+                                  BatchFormer, Barrier, Batch, LaneConfig,
+                                  RateLimiter, TokenBucket)
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float):
+        self.t += dt
+
+
+# --------------------------------------------------------------------------
+# token buckets
+# --------------------------------------------------------------------------
+
+def test_token_bucket_burst_then_refill():
+    clk = FakeClock()
+    b = TokenBucket(rate=10.0, burst=3.0, now=clk)
+    assert [b.try_acquire()[0] for _ in range(3)] == [True] * 3
+    ok, retry = b.try_acquire()
+    assert not ok and retry == pytest.approx(0.1)
+    clk.advance(0.05)                      # half a token refilled
+    assert not b.try_acquire()[0]
+    clk.advance(0.05)                      # full token now
+    assert b.try_acquire()[0]
+
+
+def test_token_bucket_rate_sustained():
+    clk = FakeClock()
+    b = TokenBucket(rate=100.0, burst=1.0, now=clk)
+    admitted = 0
+    for _ in range(1000):                  # 1kHz offered for 1 second
+        clk.advance(0.001)
+        admitted += b.try_acquire()[0]
+    assert 95 <= admitted <= 101           # ~rate, never more than rate+burst
+
+
+def test_token_bucket_caps_at_burst():
+    clk = FakeClock()
+    b = TokenBucket(rate=10.0, burst=2.0, now=clk)
+    clk.advance(100.0)                     # long idle: no unbounded credit
+    assert b.available() == pytest.approx(2.0)
+
+
+def test_token_bucket_unlimited_and_zero_rate():
+    clk = FakeClock()
+    assert TokenBucket(rate=None, now=clk).try_acquire() == (True, 0.0)
+    b = TokenBucket(rate=0.0, burst=1.0, now=clk)
+    assert b.try_acquire()[0]              # the burst token
+    ok, retry = b.try_acquire()
+    assert not ok and retry == float("inf")
+
+
+def test_rate_limiter_per_tenant_isolation():
+    clk = FakeClock()
+    lim = RateLimiter(rate=10.0, burst=1.0,
+                      per_tenant={"vip": (1000.0, 100.0)}, now=clk)
+    assert lim.admit("a")[0]
+    assert not lim.admit("a")[0]           # a's bucket empty
+    assert lim.admit("b")[0]               # b unaffected
+    assert all(lim.admit("vip")[0] for _ in range(50))
+    assert lim.sheds == {"a": 1}
+
+
+# --------------------------------------------------------------------------
+# batch former: windows, fullness, lanes
+# --------------------------------------------------------------------------
+
+def former(**kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("lanes", {INTERACTIVE: LaneConfig(0.002, 4),
+                            BATCH: LaneConfig(0.010, 4)})
+    return BatchFormer(**kw)
+
+
+def test_window_close_timing():
+    f = former()
+    f.submit("q0", lane=INTERACTIVE, now=0.0)
+    assert f.poll(0.0) is None             # window open
+    assert f.poll(0.0019) is None
+    assert f.next_deadline(0.001) == pytest.approx(0.002)
+    out = f.poll(0.002)                    # window closed exactly at deadline
+    assert isinstance(out, Batch)
+    assert [p.payload for p in out.requests] == ["q0"]
+    assert f.poll(1.0) is None             # drained
+
+
+def test_full_batch_closes_before_window():
+    f = former(max_batch=2)
+    f.submit("q0", lane=INTERACTIVE, now=0.0)
+    f.submit("q1", lane=INTERACTIVE, now=0.0)
+    f.submit("q2", lane=INTERACTIVE, now=0.0)
+    out = f.poll(0.0)                      # full: no waiting
+    assert [p.payload for p in out.requests] == ["q0", "q1"]
+    assert f.poll(0.0) is None             # q2 alone: window still open
+    assert [p.payload for p in f.poll(0.002).requests] == ["q2"]
+
+
+def test_lane_priority_interactive_first():
+    f = former()
+    f.submit("b0", lane=BATCH, now=0.0)    # arrives first
+    f.submit("i0", lane=INTERACTIVE, now=0.001)
+    out = f.poll(0.01)                     # both windows closed
+    assert [p.payload for p in out.requests] == ["i0", "b0"]
+
+
+def test_lane_priority_under_max_batch_pressure():
+    f = former(max_batch=2)
+    f.submit("b0", lane=BATCH, now=0.0)
+    f.submit("b1", lane=BATCH, now=0.0)
+    f.submit("i0", lane=INTERACTIVE, now=0.0)
+    out = f.poll(0.02)
+    assert [p.payload for p in out.requests] == ["i0", "b0"]
+    assert [p.payload for p in f.poll(0.02).requests] == ["b1"]
+
+
+def test_earliest_window_flushes_both_lanes():
+    """One closed window dispatches everything runnable — the batch lane
+    request rides along with the interactive flush."""
+    f = former()
+    f.submit("b0", lane=BATCH, now=0.0)
+    f.submit("i0", lane=INTERACTIVE, now=0.0)
+    out = f.poll(0.0021)                   # interactive window closed only
+    assert [p.payload for p in out.requests] == ["i0", "b0"]
+
+
+def test_bounded_queue_sheds_not_buffers():
+    f = former(lanes={INTERACTIVE: LaneConfig(0.002, 2),
+                      BATCH: LaneConfig(0.010, 4)})
+    assert f.submit("q0", lane=INTERACTIVE, now=0.0)[0] is not None
+    assert f.submit("q1", lane=INTERACTIVE, now=0.0)[0] is not None
+    pending, reason = f.submit("q2", lane=INTERACTIVE, now=0.0)
+    assert pending is None and reason == SHED_QUEUE_FULL
+    assert f.depth()[INTERACTIVE] == 2     # never grew past the bound
+    assert f.stats.shed == {SHED_QUEUE_FULL: 1}
+    assert f.stats.shed_by_lane[INTERACTIVE][SHED_QUEUE_FULL] == 1
+
+
+def test_unknown_lane_rejected():
+    with pytest.raises(ValueError, match="unknown lane"):
+        former().submit("q", lane="bulk", now=0.0)
+
+
+def test_next_deadline_none_when_idle():
+    f = former()
+    assert f.next_deadline(5.0) is None
+    assert f.poll(5.0) is None
+
+
+def test_batch_size_histogram_and_stats():
+    f = former(max_batch=8)
+    for i in range(3):
+        f.submit(f"q{i}", lane=INTERACTIVE, now=0.0)
+    f.poll(1.0)
+    f.submit("q3", lane=INTERACTIVE, now=2.0)
+    f.poll(3.0)
+    assert f.stats.batches == 2
+    assert f.stats.batched_requests == 4
+    assert f.stats.batch_size_hist == {3: 1, 1: 1}
+    assert f.stats.admitted[INTERACTIVE] == 4
+
+
+# --------------------------------------------------------------------------
+# mutation barriers
+# --------------------------------------------------------------------------
+
+def test_barrier_orders_queries_around_mutation():
+    """q0 (pre-barrier) flushes immediately; the mutation waits for it; q1
+    (post-barrier) waits for the mutation."""
+    f = former()
+    f.submit("q0", lane=INTERACTIVE, now=0.0)
+    f.submit("m0", kind="mutation", now=0.0)
+    f.submit("q1", lane=INTERACTIVE, now=0.0)
+    out = f.poll(0.0)                      # barrier flush: window cut short
+    assert isinstance(out, Batch)
+    assert [p.payload for p in out.requests] == ["q0"]
+    out = f.poll(0.0)                      # now the mutation is runnable
+    assert isinstance(out, Barrier) and out.request.payload == "m0"
+    assert f.poll(0.0) is None             # q1's window restarts post-barrier
+    assert [p.payload for p in f.poll(0.002).requests] == ["q1"]
+
+
+def test_mutation_alone_runs_immediately():
+    f = former()
+    f.submit("m0", kind="mutation", now=0.0)
+    out = f.poll(0.0)
+    assert isinstance(out, Barrier)
+    assert f.stats.barriers == 1
+
+
+def test_consecutive_barriers_preserve_fifo():
+    f = former()
+    f.submit("m0", kind="mutation", now=0.0)
+    f.submit("q0", lane=BATCH, now=0.0)
+    f.submit("m1", kind="mutation", now=0.0)
+    f.submit("q1", lane=BATCH, now=0.0)
+    assert f.poll(0.0).request.payload == "m0"
+    assert [p.payload for p in f.poll(0.0).requests] == ["q0"]
+    assert f.poll(0.0).request.payload == "m1"
+    assert [p.payload for p in f.poll(1.0).requests] == ["q1"]
+
+
+def test_barrier_flush_deadline_is_now():
+    f = former()
+    f.submit("q0", lane=BATCH, now=0.0)    # 10ms window...
+    f.submit("m0", kind="mutation", now=0.001)
+    assert f.next_deadline(0.001) == 0.001  # ...cut short by the barrier
+
+
+def test_mutation_queue_bounded():
+    f = former(mutation_max_queue=1)
+    assert f.submit("m0", kind="mutation", now=0.0)[0] is not None
+    pending, reason = f.submit("m1", kind="mutation", now=0.0)
+    assert pending is None and reason == SHED_QUEUE_FULL
+
+
+def test_post_barrier_queries_not_counted_runnable():
+    f = former(max_batch=2)
+    f.submit("m0", kind="mutation", now=0.0)
+    f.submit("q0", lane=INTERACTIVE, now=0.0)
+    f.submit("q1", lane=INTERACTIVE, now=0.0)
+    out = f.poll(10.0)                     # barrier first despite closed
+    assert isinstance(out, Barrier)        # windows behind it
+    assert [p.payload for p in f.poll(10.0).requests] == ["q0", "q1"]

@@ -1,0 +1,432 @@
+"""Serving front tier correctness: server-batched responses bit-identical
+to sequential ``serve`` (ids AND scores) across all four seekers + combiner
+DAGs on static / live / sharded stores and both probe backends; mutation
+barriers under concurrent traffic; admission control (rate limits, bounded
+queues, typed Overloaded); telemetry (queue_seconds, batch_size, stats,
+explain); the asyncio façade; and a hypothesis property interleaving
+queries with mutations against the brute-force oracle."""
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+import blend
+from oracle import oracle_ids, oracle_run
+from repro.core.lake import DataLake, Table, synthetic_lake
+from repro.serve.batching import BATCH, INTERACTIVE
+from repro.serve.engine import DiscoveryEngine
+from repro.serve.loadgen import (Trace, TraceEvent, make_trace,
+                                 mutation_table, query_pool, replay,
+                                 zipf_qids)
+from repro.serve.server import (AsyncDiscoveryServer, DiscoveryServer,
+                                Overloaded)
+
+
+def serving_lake(seed=9, n_tables=16):
+    return synthetic_lake(n_tables=n_tables, rows=14, cols=4, vocab=200,
+                          seed=seed)
+
+
+def pool4(lake, k=20):
+    """All four seekers and every combiner shape (the parity surface)."""
+    t = lake.tables[3]
+    sc = blend.sc(list(t.columns[0][:8]), k=k)
+    kw = blend.kw([t.columns[1][0], t.columns[1][2]], k=k)
+    mc = blend.mc([(t.columns[0][r], t.columns[1][r]) for r in range(4)], k=k)
+    corr = blend.corr(list(t.columns[0][:8]),
+                      [float(i) for i in range(8)], k=k, h=64)
+    return [(sc & mc).top(10),
+            (sc | corr).top(10),
+            blend.counter(sc, kw, mc, k=10),
+            (mc - kw).top(10),
+            ((sc & kw) | corr).top(10)]
+
+
+def extra_table(i, rows=10, vocab=200):
+    rng = np.random.default_rng(3000 + i)
+    return Table(f"srv_extra{i}",
+                 [[f"tok_{int(x)}" for x in rng.integers(0, vocab, rows)],
+                  [f"tok_{int(x)}" for x in rng.integers(0, vocab, rows)],
+                  [float(x) for x in np.round(rng.normal(0, 5, rows), 3)]])
+
+
+def assert_responses_identical(got, want, ctx=""):
+    assert got.table_ids == want.table_ids, ctx
+    np.testing.assert_array_equal(np.asarray(got.scores),
+                                  np.asarray(want.scores), err_msg=str(ctx))
+
+
+# --------------------------------------------------------------------------
+# bit-identical parity: server-batched vs sequential serve
+# --------------------------------------------------------------------------
+
+MODES = ["static", "live", "sharded"]
+BACKENDS = [("sorted", False), ("bucket", True)]
+
+
+def mode_engine(mode, lake, backend="sorted", interpret=False):
+    if mode == "static":
+        return DiscoveryEngine(lake, backend=backend, interpret=interpret)
+    if mode == "live":
+        return DiscoveryEngine(lake, live=True, backend=backend,
+                               interpret=interpret)
+    return DiscoveryEngine(lake, shards=2, live=True, backend=backend,
+                           interpret=interpret)
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("backend,interpret", BACKENDS)
+def test_server_batched_matches_sequential(mode, backend, interpret):
+    """The acceptance property: concurrent submissions coalesced into fused
+    batches return ids and scores bit-identical to one-at-a-time serve, on
+    every store mode and both probe backends."""
+    lake = serving_lake()
+    engine = mode_engine(mode, lake, backend=backend, interpret=interpret)
+    pool = pool4(lake)
+    want = [engine.serve(q, fused=True) for q in pool]
+    server = DiscoveryServer(engine, max_batch=8,
+                             interactive_window_s=0.02)
+    try:
+        futs = [server.submit(q) for q in pool]
+        got = [f.result(timeout=120) for f in futs]
+    finally:
+        server.stop()
+    assert max(r.batch_size for r in got) >= 2     # actually coalesced
+    for q, g, w in zip(pool, got, want):
+        assert_responses_identical(g, w, ctx=(mode, backend, q.to_sql()))
+
+
+def test_concurrent_submitters_parity():
+    """Many client threads hammering submit() concurrently: every response
+    still matches its own sequential serve."""
+    lake = serving_lake(seed=11)
+    engine = DiscoveryEngine(lake, live=True)
+    pool = pool4(lake)
+    want = {i: engine.serve(q, fused=True) for i, q in enumerate(pool)}
+    server = DiscoveryServer(engine, max_batch=16)
+    results: dict = {}
+
+    def client(tid):
+        futs = [(i, server.submit(pool[i],
+                                  lane=INTERACTIVE if i % 2 else BATCH,
+                                  tenant=f"t{tid}"))
+                for i in range(len(pool))]
+        results[tid] = [(i, f.result(timeout=120)) for i, f in futs]
+
+    try:
+        threads = [threading.Thread(target=client, args=(t,))
+                   for t in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+    finally:
+        server.stop()
+    assert len(results) == 4
+    for tid, rs in results.items():
+        for i, resp in rs:
+            assert not isinstance(resp, Overloaded)
+            assert_responses_identical(resp, want[i], ctx=(tid, i))
+
+
+def test_mutation_barrier_epoch_consistency():
+    """Queries before a mutation observe the old epoch, queries after it the
+    new one — matching a sequential reference engine executing the same
+    arrival order on its own identical store."""
+    lake = serving_lake(seed=13)
+    engine = DiscoveryEngine(lake, live=True)
+    ref = DiscoveryEngine(lake, live=True)
+    pool = pool4(lake)
+    server = DiscoveryServer(engine, max_batch=8)
+    try:
+        pre = [server.submit(q) for q in pool]
+        mut = server.add_table(extra_table(0))
+        post = [server.submit(q) for q in pool]
+        drop = server.drop_table(mut.result(timeout=120))
+        final = [server.submit(q) for q in pool]
+
+        want_pre = [ref.serve(q, fused=True) for q in pool]
+        ref_tid = ref.add_table(extra_table(0))
+        want_post = [ref.serve(q, fused=True) for q in pool]
+        ref.drop_table(ref_tid)
+        want_final = [ref.serve(q, fused=True) for q in pool]
+
+        assert drop.result(timeout=120) == ref_tid
+        for futs, wants in ((pre, want_pre), (post, want_post),
+                            (final, want_final)):
+            for f, w in zip(futs, wants):
+                assert_responses_identical(f.result(timeout=120), w)
+    finally:
+        server.stop()
+    assert server.stats()["mutations"]["executed"] == 2
+
+
+def test_sharded_mutation_barrier_parity():
+    lake = serving_lake(seed=17)
+    engine = DiscoveryEngine(lake, shards=2, live=True)
+    ref = DiscoveryEngine(lake, shards=2, live=True)
+    q = pool4(lake)[0]
+    server = DiscoveryServer(engine)
+    try:
+        server.add_table(extra_table(5)).result(timeout=120)
+        ref.add_table(extra_table(5))
+        assert_responses_identical(server.serve(q),
+                                   ref.serve(q, fused=True))
+    finally:
+        server.stop()
+
+
+# --------------------------------------------------------------------------
+# hypothesis: interleaved queries + mutations vs the brute-force oracle
+# --------------------------------------------------------------------------
+
+def oracle_want(session, tables, q):
+    """Expected ids for ``q`` over the current live tables, straight from
+    the pure-NumPy oracle (add-only traffic keeps table ids positional)."""
+    plan = session.compile(q).plan
+    scores, mask = oracle_run(DataLake(tables=list(tables)), plan)
+    return oracle_ids(scores, mask)
+
+
+@settings(max_examples=4, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow,
+                                 HealthCheck.data_too_large])
+@given(st.lists(st.tuples(st.sampled_from(["query", "add", "compact"]),
+                          st.integers(0, 10 ** 6)),
+                min_size=2, max_size=7))
+def test_property_server_matches_oracle_under_interleaving(ops):
+    """Property: ANY interleaving of concurrent queries and mutations
+    through the server yields oracle-exact ids at every epoch (queries are
+    submitted unoptimized so the oracle's evaluation order applies)."""
+    lake = serving_lake(seed=23, n_tables=10)
+    engine = DiscoveryEngine(lake, live=True)
+    pool = pool4(lake, k=12)
+    tables = list(lake.tables)
+    server = DiscoveryServer(engine, max_batch=8, optimize=False)
+    try:
+        checks = []                        # (future, expected ids, step)
+        n_added = 0
+        for i, (op, arg) in enumerate(ops):
+            if op == "add":
+                tab = extra_table(100 + n_added, rows=6 + arg % 7)
+                n_added += 1
+                server.add_table(tab)
+                tables.append(tab)
+            elif op == "compact":
+                server.compact(full=arg % 2 == 0)
+            else:
+                q = pool[arg % len(pool)]
+                want = oracle_want(engine.session, tables, q)
+                checks.append((server.submit(q), want, (i, op)))
+        for fut, want, step in checks:
+            assert fut.result(timeout=120).table_ids == want, step
+    finally:
+        server.stop()
+
+
+# --------------------------------------------------------------------------
+# admission control: rate limits, backpressure, typed shedding
+# --------------------------------------------------------------------------
+
+def test_rate_limit_sheds_with_retry_after():
+    lake = serving_lake(seed=29)
+    clock = [0.0]
+    server = DiscoveryServer(DiscoveryEngine(lake), rate=10.0, burst=2.0,
+                             start=False, now=lambda: clock[0])
+    q = pool4(lake)[0]
+    a = server.submit(q, tenant="alice").done()
+    b = server.submit(q, tenant="alice").done()
+    shed = server.submit(q, tenant="alice").result()   # bucket empty
+    assert not a and not b                 # admitted: still queued
+    assert isinstance(shed, Overloaded)
+    assert shed.reason == "rate_limit" and shed.tenant == "alice"
+    assert shed.retry_after_s == pytest.approx(0.1)
+    ok = server.submit(q, tenant="bob")    # other tenants unaffected
+    assert not ok.done()
+    clock[0] += 0.1                        # one token refilled
+    assert not server.submit(q, tenant="alice").done()
+    stats = server.stats()
+    assert stats["shed"]["rate_limit"] == 1
+    assert stats["shed"]["by_tenant"] == {"alice": 1}
+    server.start()                         # drain the admitted requests
+    server.stop()
+
+
+def test_queue_full_sheds_and_bounds_depth():
+    lake = serving_lake(seed=31)
+    server = DiscoveryServer(DiscoveryEngine(lake), max_queue=2,
+                             batch_max_queue=1, start=False)
+    q = pool4(lake)[0]
+    admitted = [server.submit(q, lane=INTERACTIVE) for _ in range(2)]
+    shed = server.submit(q, lane=INTERACTIVE).result()
+    assert isinstance(shed, Overloaded) and shed.reason == "queue_full"
+    assert shed.lane == INTERACTIVE
+    server.submit(q, lane=BATCH)
+    shed_b = server.submit(q, lane=BATCH).result()
+    assert isinstance(shed_b, Overloaded) and shed_b.lane == BATCH
+    stats = server.stats()
+    assert stats["queue_depth"][INTERACTIVE] == 2      # bounded, not grown
+    assert stats["lane_occupancy"][INTERACTIVE]["utilization"] == 1.0
+    assert stats["shed"]["queue_full"] == 2
+    server.start()                         # backlog drains after start
+    for f in admitted:
+        assert f.result(timeout=120).table_ids
+    server.stop()
+
+
+# --------------------------------------------------------------------------
+# telemetry
+# --------------------------------------------------------------------------
+
+def test_response_telemetry_and_stats():
+    lake = serving_lake(seed=37)
+    engine = DiscoveryEngine(lake)
+    pool = pool4(lake)
+    for q in pool:                         # warm jit before timing-ish bits
+        engine.serve(q, fused=True)
+    server = DiscoveryServer(engine, max_batch=8,
+                             interactive_window_s=0.02)
+    try:
+        futs = [server.submit(q) for q in pool]
+        got = [f.result(timeout=120) for f in futs]
+    finally:
+        server.stop()
+    for r in got:
+        assert r.queue_seconds > 0.0       # sat in the window
+        assert r.batch_size == len(pool)
+        assert r.launches > 0
+    stats = server.stats()
+    assert stats["served"] == len(pool)
+    assert stats["batches"]["formed"] >= 1
+    assert stats["batches"]["size_hist"][str(len(pool))] >= 1
+    assert stats["launches"]["per_batch_mean"] > 0
+    assert stats["launches"]["total"] >= stats["batches"]["formed"]
+
+
+def test_explain_renders_server_section():
+    lake = serving_lake(seed=41)
+    server = DiscoveryServer(DiscoveryEngine(lake, live=True))
+    try:
+        q = pool4(lake)[0]
+        server.serve(q)
+        ex = server.explain(q)
+    finally:
+        server.stop()
+    assert ex.server["served"] == 1
+    text = str(ex)
+    assert "== server ==" in text
+    assert "queue depth" in text and "lane occupancy" in text
+    assert "shed:" in text and "launches/batch" in text
+    # plain session.explain stays server-free
+    assert "== server ==" not in str(server.session.explain(q))
+
+
+# --------------------------------------------------------------------------
+# async façade
+# --------------------------------------------------------------------------
+
+def test_async_facade_parity():
+    import asyncio
+    lake = serving_lake(seed=43)
+    engine = DiscoveryEngine(lake, live=True)
+    pool = pool4(lake)
+    want = [engine.serve(q, fused=True) for q in pool]
+
+    async def run():
+        async with AsyncDiscoveryServer(engine, max_batch=8) as server:
+            tid = await server.add_table(extra_table(9))
+            await server.drop_table(tid)
+            out = await asyncio.gather(
+                *[server.serve(q, tenant=f"t{i % 2}")
+                  for i, q in enumerate(pool)])
+            return out, server.stats()
+
+    got, stats = asyncio.run(run())
+    for g, w in zip(got, want):
+        assert_responses_identical(g, w)
+    assert stats["mutations"]["executed"] == 2
+
+
+# --------------------------------------------------------------------------
+# load generator determinism
+# --------------------------------------------------------------------------
+
+def test_trace_generation_deterministic():
+    lake = serving_lake(seed=47)
+    kw = dict(seed=5, duration_s=1.0, rate_rps=100.0, p_mutation=0.1)
+    a = make_trace(lake, **kw)
+    b = make_trace(lake, **kw)
+    assert len(a.events) == len(b.events) > 10
+    for ea, eb in zip(a.events, b.events):
+        assert (ea.t, ea.kind, ea.tenant, ea.lane, ea.qid) == \
+            (eb.t, eb.kind, eb.tenant, eb.lane, eb.qid)
+        if ea.kind == "query":
+            assert ea.payload.fingerprint() == eb.payload.fingerprint()
+    assert make_trace(lake, seed=6, duration_s=1.0,
+                      rate_rps=100.0).events[0].t != a.events[0].t
+    # drops only ever name previously added tables
+    alive = set()
+    for ev in a.events:
+        if ev.kind == "add":
+            alive.add(ev.payload.name)
+        elif ev.kind == "drop":
+            assert ev.payload in alive
+            alive.discard(ev.payload)
+
+
+def test_zipf_mix_is_cache_friendly():
+    rng = np.random.default_rng(0)
+    qids = zipf_qids(rng, 24, 2000, a=1.1)
+    counts = np.bincount(qids, minlength=24)
+    assert counts[0] > counts[-1]          # head >> tail
+    assert counts[0] > 2000 / 24 * 3
+
+
+def test_replay_without_real_pacing():
+    """Replay with injected no-op sleep: the whole trace submits instantly,
+    metrics still line up with the server's own accounting."""
+    lake = serving_lake(seed=53)
+    engine = DiscoveryEngine(lake, live=True)
+    trace = make_trace(lake, seed=3, duration_s=0.5, rate_rps=60.0,
+                       n_distinct=6, k=12, p_mutation=0.1)
+    server = DiscoveryServer(engine, max_batch=8)
+    try:
+        report = replay(server, trace, sleep=lambda s: None)
+    finally:
+        server.stop()
+    n_queries = sum(1 for e in trace.events if e.kind == "query")
+    n_muts = len(trace.events) - n_queries
+    assert report.offered == n_queries
+    assert report.completed + report.shed == n_queries
+    assert report.mutations == n_muts
+    assert report.completed == len(report.latencies_s)
+    assert report.goodput_rps > 0
+    d = report.as_dict()
+    assert set(d["latency_ms"]) == {"p50", "p95", "p99"}
+    assert d["batch_occupancy_hist"]
+
+
+def test_replay_overload_sheds_but_serves_admitted():
+    """A tiny-queue server under a no-pacing burst: some traffic shed with
+    typed reasons, everything admitted still answered (bounded queues,
+    no unbounded buildup)."""
+    lake = serving_lake(seed=59)
+    engine = DiscoveryEngine(lake)
+    trace = make_trace(lake, seed=4, duration_s=0.5, rate_rps=400.0,
+                       n_distinct=6, k=12)
+    server = DiscoveryServer(engine, max_batch=4, max_queue=4,
+                             batch_max_queue=2, start=False)
+    try:
+        submitted = [(ev, server.submit(ev.payload, lane=ev.lane,
+                                        tenant=ev.tenant))
+                     for ev in trace.events]
+        sheds = [f.result() for _, f in submitted if f.done()]
+        assert sheds and all(isinstance(s, Overloaded) for s in sheds)
+        assert server.stats()["queue_depth"][INTERACTIVE] <= 4
+        server.start()
+        for _, f in submitted:
+            out = f.result(timeout=120)
+            assert isinstance(out, Overloaded) or out.table_ids is not None
+    finally:
+        server.stop()
