@@ -23,7 +23,12 @@ replays get a quiet interpreter): goodput and p50/p99 vs offered load
 under a seeded Zipf/bursty trace, batch-occupancy histograms, shed rate
 at overload, and the query+mutation barrier scenario (acceptance: batched
 goodput >= 3x single-request serving with shedding engaged and bounded
-queues at the heaviest offered load).
+queues at the heaviest offered load).  The same subprocess also writes
+``BENCH_8.json``: the observability cost/coverage benchmark — queue-wait
+p50/p99 per offered load, tier throughput with instrumentation disabled /
+metrics-only / metrics+tracing (acceptance: disabled path costs <= 2% vs
+the BENCH_7 tier baseline from the same run), and per-request trace span
+coverage.
 
     PYTHONPATH=src python benchmarks/run_all.py [--out PATH] [--full]
 
@@ -424,12 +429,15 @@ def main(out_path: Path, full: bool = False, iters: int = 10) -> dict:
     # The full sweep (5 offered-load levels, warm-until-stable per level)
     # takes minutes; without --full run the CI-sized smoke sweep.
     serving_path = out_path.parent / "BENCH_7.json"
+    obs_path = out_path.parent / "BENCH_8.json"
     r = subprocess.run(
         [sys.executable, str(REPO_ROOT / "benchmarks/serving_bench.py"),
-         "--out", str(serving_path)] + ([] if full else ["--smoke"]),
+         "--out", str(serving_path), "--out8", str(obs_path)]
+        + ([] if full else ["--smoke"]),
         check=False)
     if r.returncode == 0:
         print(f"wrote {serving_path}")
+        print(f"wrote {obs_path}")
     else:
         print(f"serving bench failed (exit {r.returncode}); "
               f"skipping {serving_path}")

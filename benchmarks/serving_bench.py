@@ -27,8 +27,19 @@ programs are keyed on the store's segment layout, so mutation traces are
 reset (loadgen tables dropped, store compacted) after every round: each
 replay then walks the same segment-layout path the previous one compiled.
 
+Observability section (BENCH_8): the same tier measured with the
+``repro.obs`` instrumentation in each of its three states — disabled
+(null-object fast path), metrics enabled, and metrics + per-request flight
+recorder — as interleaved closed-loop runs, so "what does observability
+cost" has a measured answer next to the goodput numbers it guards.  Also
+records queue-wait p50/p99 per offered-load level and per-request trace
+span coverage (children of the request root must tile it).  Acceptance:
+the disabled path costs <= 2% tier throughput vs the BENCH_7 baseline
+measured in the same run, and span coverage is within 10% of measured
+end-to-end latency.
+
     PYTHONPATH=src python benchmarks/serving_bench.py [--out PATH]
-        [--smoke] [--seed N] [--duration S]
+        [--out8 PATH] [--smoke] [--seed N] [--duration S]
 """
 from __future__ import annotations
 
@@ -225,13 +236,167 @@ def main(out_path: Path, *, seed: int = 7, duration_s: float = 2.0,
     return payload
 
 
+def _median(xs: list) -> float:
+    s = sorted(xs)
+    return s[len(s) // 2]
+
+
+def main_obs(out_path: Path, *, seed: int = 7, duration_s: float = 2.0,
+             smoke: bool = False, bench7: dict | None = None) -> dict:
+    """BENCH_8: the observability cost/coverage benchmark (module
+    docstring).  ``bench7`` is the in-process BENCH_7 payload from
+    :func:`main` — its ``tier_single_request_rps`` baseline was measured
+    with the same config in the same interpreter, so the disabled-path
+    overhead comparison is like-for-like."""
+    from repro import obs
+
+    n_tables = 40 if smoke else 150
+    n_distinct = 8 if smoke else 24
+    levels = [400.0, 1200.0] if smoke else [250.0, 500.0, 1000.0, 2000.0]
+    warm_rounds = 2 if smoke else 4
+    base_iters = 120 if smoke else 360
+    reps = 2 if smoke else 3
+
+    obs.disable()
+    lake = synthetic_lake(n_tables=n_tables, rows=30, vocab=1200,
+                          seed=seed % 100)
+    engine = DiscoveryEngine(lake, live=True)
+    pool = query_pool(lake, np.random.default_rng(seed),
+                      n_distinct=n_distinct, k=24)
+    rng = np.random.default_rng(seed + 1)
+    stream = [pool[i] for i in zipf_qids(rng, len(pool), base_iters, a=1.1)]
+
+    def mk(**kw):
+        return DiscoveryServer(engine, max_batch=MAX_BATCH, **kw)
+
+    # ---- queue-wait percentiles per offered load (obs disabled) ---------
+    loads = []
+    for offered in levels:
+        trace = make_trace(lake, seed=seed, duration_s=duration_s,
+                           rate_rps=offered, n_distinct=n_distinct, k=24,
+                           p_mutation=0.0)
+        srv = mk()
+        replay(srv, trace, sleep=lambda s: None)   # compile flood, unpaced
+        srv.stop()
+        _warm_until_stable(engine, mk, trace, warm_rounds)
+        srv = mk()
+        d = replay(srv, trace).as_dict()
+        srv.stop()
+        loads.append({"offered_rps": trace.offered_rps,
+                      "goodput_rps": d["goodput_rps"],
+                      "queue_ms_p50": d["queue_ms_p50"],
+                      "queue_ms_p99": d["queue_ms_p99"],
+                      "latency_ms": d["latency_ms"],
+                      "shed_rate": d["shed_rate"]})
+        print(f"offered {trace.offered_rps:7.0f} rps: queue-wait "
+              f"p50 {d['queue_ms_p50']:7.2f} p99 {d['queue_ms_p99']:7.2f} ms"
+              f" | goodput {d['goodput_rps']:7.0f}")
+
+    # ---- overhead: closed-loop tier throughput per obs state ------------
+    # max_batch=1 matches BENCH_7's tier_single_request baseline exactly;
+    # closed-loop puts the instrumented submit/dispatch path on the
+    # critical path of every request, the most overhead-sensitive shape.
+    # Modes interleave (D,M,T per rep) so drift hits all three equally.
+    def tier_rps(enabled: bool, traced: bool) -> float:
+        if enabled:
+            obs.enable()
+        srv = DiscoveryServer(engine, max_batch=1, trace=traced)
+        try:
+            for q in pool:                          # warm this server
+                srv.serve(q)
+            return _closed_loop(srv.serve, stream)
+        finally:
+            srv.stop()
+            obs.disable()
+
+    tier_rps(False, False)                          # one throwaway warm run
+    modes = {"disabled": [], "metrics": [], "traced": []}
+    for _ in range(reps):
+        modes["disabled"].append(tier_rps(False, False))
+        modes["metrics"].append(tier_rps(True, False))
+        modes["traced"].append(tier_rps(True, True))
+    med = {k: _median(v) for k, v in modes.items()}
+
+    # ---- trace span coverage: children tile the request root -----------
+    obs.enable()
+    srv = mk(trace=True)
+    coverages, wall_ratios = [], []
+    try:
+        for q in stream[: len(pool) * 2]:
+            t0 = time.perf_counter()
+            resp = srv.serve(q)
+            wall = time.perf_counter() - t0
+            root = resp.trace
+            covered = sum(c.duration for c in root.children)
+            coverages.append(covered / root.duration)
+            # spans vs externally measured end-to-end latency
+            wall_ratios.append(covered / wall)
+    finally:
+        srv.stop()
+        obs.disable()
+    cov = {"mean": round(float(np.mean(coverages)), 4),
+           "min": round(float(np.min(coverages)), 4),
+           "wall_ratio_p50": round(float(np.percentile(wall_ratios, 50)), 4)}
+
+    # ---- acceptance -----------------------------------------------------
+    b7_tier = (bench7 or {}).get("baselines", {}).get(
+        "tier_single_request_rps")
+    disabled_overhead = (None if not b7_tier else
+                         round((b7_tier - med["disabled"]) / b7_tier, 4))
+    accept = {
+        "tier_rps_disabled": round(med["disabled"], 1),
+        "tier_rps_metrics": round(med["metrics"], 1),
+        "tier_rps_traced": round(med["traced"], 1),
+        "bench7_tier_rps": None if not b7_tier else round(b7_tier, 1),
+        "disabled_overhead_vs_bench7": disabled_overhead,
+        "target_disabled_overhead": 0.02,
+        "overhead_ok": (disabled_overhead is None
+                        or disabled_overhead <= 0.02),
+        "metrics_overhead":
+            round(1.0 - med["metrics"] / med["disabled"], 4),
+        "traced_overhead":
+            round(1.0 - med["traced"] / med["disabled"], 4),
+        "span_coverage_mean": cov["mean"],
+        "coverage_ok": cov["mean"] >= 0.9 and cov["wall_ratio_p50"] >= 0.9,
+    }
+    payload = {
+        "bench": "BENCH_8",
+        "seed": seed,
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "smoke": smoke,
+        "config": {
+            "n_tables": n_tables, "rows": 30, "vocab": 1200,
+            "n_distinct_queries": n_distinct, "zipf_a": 1.1,
+            "max_batch": MAX_BATCH, "duration_s": duration_s,
+            "closed_loop_iters": base_iters, "overhead_reps": reps,
+            "note": "overhead modes run interleaved closed-loop at "
+                    "max_batch=1 (BENCH_7 tier_single_request parity)",
+        },
+        "loads": loads,
+        "overhead_rps": {k: [round(x, 1) for x in v]
+                         for k, v in modes.items()},
+        "span_coverage": cov,
+        "acceptance": accept,
+    }
+    out_path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {out_path}")
+    print(f"tier rps disabled/metrics/traced: {med['disabled']:.0f} / "
+          f"{med['metrics']:.0f} / {med['traced']:.0f}")
+    print(f"acceptance: {accept}")
+    return payload
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", type=Path, default=REPO_ROOT / "BENCH_7.json")
+    ap.add_argument("--out8", type=Path, default=REPO_ROOT / "BENCH_8.json")
     ap.add_argument("--seed", type=int, default=7)
     ap.add_argument("--duration", type=float, default=2.0)
     ap.add_argument("--smoke", action="store_true",
                     help="small lake / short traces for CI")
     args = ap.parse_args()
-    main(args.out, seed=args.seed, duration_s=args.duration,
-         smoke=args.smoke)
+    b7 = main(args.out, seed=args.seed, duration_s=args.duration,
+              smoke=args.smoke)
+    main_obs(args.out8, seed=args.seed, duration_s=args.duration,
+             smoke=args.smoke, bench7=b7)

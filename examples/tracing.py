@@ -1,0 +1,68 @@
+"""End-to-end observability: metrics registry + per-query flight recorder.
+
+Enables ``repro.obs``, serves a seeded trace through a tracing
+DiscoveryServer over a live lake, then dumps the flight recorder as
+Perfetto-loadable Chrome trace JSON (TRACE_8.json), renders one request's
+span tree, and prints the process metrics snapshot.
+
+    PYTHONPATH=src python examples/tracing.py [out.json]
+"""
+import sys
+
+import blend  # noqa: F401  (registers the fluent API used by loadgen)
+from repro import obs
+from repro.core.lake import synthetic_lake
+from repro.serve.engine import DiscoveryEngine
+from repro.serve.loadgen import make_trace, replay
+from repro.serve.server import DiscoveryServer
+
+
+def main(out_path="TRACE_8.json"):
+    lake = synthetic_lake(n_tables=120, rows=30, vocab=1000, seed=1)
+    engine = DiscoveryEngine(lake, live=True, cache=True)
+    print(f"index ready: {engine.index.n_postings} postings, "
+          f"{lake.n_tables} tables")
+
+    trace = make_trace(lake, seed=21, duration_s=1.5, rate_rps=80.0,
+                       n_distinct=10, k=24, p_mutation=0.02)
+
+    # warm the jit caches so the recorded trace shows steady-state serving,
+    # not compilation (compile-heavy spans carry a compiled=True attribute)
+    with DiscoveryServer(engine) as srv:
+        replay(srv, trace, sleep=lambda s: None)
+
+    reg = obs.enable()
+    server = DiscoveryServer(engine, trace=True,
+                             interactive_window_s=0.004, batch_window_s=0.02)
+    report = replay(server, trace)
+    d = report.as_dict()
+    print(f"\n== replay == goodput {d['goodput_rps']:.0f} rps | "
+          f"e2e p50 {d['latency_ms']['p50']:.1f} ms "
+          f"p99 {d['latency_ms']['p99']:.1f} ms | "
+          f"queue p50 {d['queue_ms_p50']:.2f} ms "
+          f"p99 {d['queue_ms_p99']:.2f} ms")
+
+    # one served request's flight-recorder tree: queue -> batch ->
+    # pin_epoch -> per-kind probes (per-shard children) -> merge -> drain
+    # -> transfer.  The same trees go into the Chrome/Perfetto export.
+    # A fresh value draw (same shapes, new values) misses the result cache,
+    # so the tree shows the full probe path, not a cache-hit short-circuit.
+    import numpy as np
+    from repro.serve.loadgen import query_pool
+    fresh = query_pool(lake, np.random.default_rng(99), n_distinct=1, k=24)
+    resp = server.serve(fresh[0])
+    print("\n== one request's span tree ==")
+    print(resp.trace.render())
+
+    path = server.dump_trace(out_path)
+    print(f"\nwrote {path} — open in https://ui.perfetto.dev or "
+          f"chrome://tracing")
+
+    print("\n== metrics snapshot ==")
+    print(reg.render())
+    server.stop()
+    obs.disable()
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:2])

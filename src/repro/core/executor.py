@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import combiners as comb
 from repro.core import seekers as seek
 from repro.core.cost_model import CostModel
@@ -394,6 +395,10 @@ class Executor:
         ep = optimize_plan(plan, self.seeker_stats, cost_model) if optimize \
             else None
         memo: dict[str, comb.ResultSet] = {}
+        # synchronized-timing mode (repro.obs.set_sync_timing): per-node
+        # timings measure device compute, not async-dispatch enqueue —
+        # each node blocks before its clock read, serializing the pipeline
+        sync_time = obs.sync_timing()
 
         def timed_seeker(name, spec, allowed=None):
             t0 = time.perf_counter()
@@ -408,6 +413,8 @@ class Executor:
                 info.cached_nodes.append(name)
             else:
                 rs = self.run_seeker(spec, allowed=allowed, sync=sync)
+                if sync_time and not sync:
+                    jax.block_until_ready(rs.scores)
                 info.seeker_runs += 1
                 info.launches += self._last_launches
                 info.overflow_parts.append(self._last_overflow)
@@ -445,6 +452,8 @@ class Executor:
                         b = eval_node(node.deps[1])
                     t0 = time.perf_counter()
                     rs = comb.difference(a, b, k)
+                    if sync_time:
+                        jax.block_until_ready(rs.scores)
                     info.node_seconds[name] = time.perf_counter() - t0
                     info.order.append(name)
                     info.launches += 1
@@ -459,6 +468,8 @@ class Executor:
                         rs = comb.counter(deps, k)
                     else:
                         raise ValueError(kind)
+                    if sync_time:
+                        jax.block_until_ready(rs.scores)
                     info.node_seconds[name] = time.perf_counter() - t0
                     info.order.append(name)
                     info.launches += 1
@@ -466,6 +477,11 @@ class Executor:
             return rs
 
         result = eval_node(plan.output)
+        reg = obs.registry()
+        reg.counter("exec.plans").inc()
+        reg.counter("exec.launches").inc(info.launches)
+        reg.counter("exec.seeker_runs").inc(info.seeker_runs)
+        reg.histogram("exec.plan_seconds").observe(info.total_seconds)
         return result, info
 
     def _run_group(self, plan, eg, combiner_node, info, timed_seeker,
@@ -491,6 +507,8 @@ class Executor:
                 results.append(eval_node(dep))
         t0 = time.perf_counter()
         rs = comb.intersect(results, combiner_node.spec.k)
+        if obs.sync_timing():
+            jax.block_until_ready(rs.scores)
         info.node_seconds[combiner_node.name] = time.perf_counter() - t0
         info.order.append(combiner_node.name)
         info.launches += 1

@@ -54,8 +54,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import seekers as seek
 from repro.core.combiners import ResultSet
+from repro.obs import trace as otrace
 from repro.core.executor import (ExecInfo, OverflowSlice, PAD_SENTINEL,
                                  _pow2_at_least)
 from repro.core.hashing import row_superkey, split_u64
@@ -376,19 +378,43 @@ def _launch_group(ex, key, tasks):
                                      row_stride=ex.index.row_stride)
 
     engines = getattr(ex, "engines", None)
-    caps = np.zeros(width, np.int32)
+    rec = otrace.current()
+    mreg = obs.registry()
+    sync_time = obs.sync_timing()
     if engines is None:
+        caps = np.zeros(width, np.int32)
         m_cap = fill_caps(caps, None)
-        return dispatch(ex.engine, caps, m_cap)
+        with rec.span("shard:0", m_cap=m_cap, seekers=len(tasks)):
+            t0 = time.perf_counter()
+            sc, ov = dispatch(ex.engine, caps, m_cap)
+            if sync_time:
+                jax.block_until_ready(sc)
+            mreg.histogram("shard.probe_seconds.0").observe(
+                time.perf_counter() - t0)
+        return sc, ov
     scores, ovf = [], []
+    shard_s = []
     for s, eng in enumerate(engines):
         caps = np.zeros(width, np.int32)
         m_cap = fill_caps(caps, s)
-        sc, ov = dispatch(eng, caps, m_cap)
+        with rec.span(f"shard:{s}", m_cap=m_cap, seekers=len(tasks)):
+            t0 = time.perf_counter()
+            sc, ov = dispatch(eng, caps, m_cap)
+            if sync_time:
+                jax.block_until_ready(sc)
+            dt = time.perf_counter() - t0
+        shard_s.append(dt)
+        mreg.histogram(f"shard.probe_seconds.{s}").observe(dt)
         # stage results on the merge device so the single DAG program
         # consumes them without implicit cross-device transfers
         scores.append(jax.device_put(sc, ex.merge_device))
         ovf.append(jax.device_put(ov, ex.merge_device))
+    # shard skew for this launch: slowest / mean probe time (1.0 = level).
+    # Only meaningful under synchronized timing — async it measures
+    # enqueue skew, which is still a leading indicator of a hot shard.
+    mean_s = sum(shard_s) / len(shard_s)
+    if mean_s > 0:
+        mreg.gauge("shard.imbalance").set(max(shard_s) / mean_s)
     return tuple(scores), tuple(ovf)
 
 
@@ -518,10 +544,25 @@ def run_fused(ex, plans, optimize=True, cost_model=None, cache=None):
         groups.setdefault(h.group_key, []).append(h)
     group_out: dict[tuple, tuple] = {}
     launch_seconds: dict[tuple, float] = {}
+    rec = otrace.current()
+    mreg = obs.registry()
     for key in sorted(groups):
+        kind_name = "/".join(str(p) for p in key)
+        # compile-vs-execute split: a launch that bumped TRACE_COUNTS paid
+        # a jit trace+compile; steady-state launches must land in
+        # exec.probe_seconds only (retrace-freedom made observable)
+        tr0 = sum(seek.TRACE_COUNTS.values())
         t0 = time.perf_counter()
-        group_out[key] = _launch_group(ex, key, groups[key])
-        launch_seconds[key] = time.perf_counter() - t0
+        with rec.span("probe:" + kind_name, seekers=len(groups[key])) as sp:
+            group_out[key] = _launch_group(ex, key, groups[key])
+        dt = time.perf_counter() - t0
+        launch_seconds[key] = dt
+        if sum(seek.TRACE_COUNTS.values()) > tr0:
+            sp.set("compiled", True)
+            mreg.counter("exec.compiles").inc()
+            mreg.histogram("exec.compile_seconds").observe(dt)
+        else:
+            mreg.histogram("exec.probe_seconds").observe(dt)
     group_plans: dict[tuple, set] = {}
     for t in tasks:                    # dupes adopt their head's placement
         t.group_key = t.head.group_key
@@ -543,9 +584,20 @@ def run_fused(ex, plans, optimize=True, cost_model=None, cache=None):
             cm = jnp.stack([c.result.mask for c in pr.cached])
         else:
             cs, cm = _empty_cached(ex.n_tables)
+        # the DAG program is the cross-shard merge + the whole combiner tree
+        tr0 = sum(seek.TRACE_COUNTS.values())
         t0 = time.perf_counter()
-        regs = _run_dag(gs, rows, cs, cm, prog=tuple(pr.instrs))
+        with rec.span("merge", instrs=len(pr.instrs)) as sp:
+            regs = _run_dag(gs, rows, cs, cm, prog=tuple(pr.instrs))
+            if obs.sync_timing():
+                jax.block_until_ready(regs[pr.out_reg][0])
         dag_s = time.perf_counter() - t0
+        if sum(seek.TRACE_COUNTS.values()) > tr0:
+            sp.set("compiled", True)
+            mreg.counter("exec.compiles").inc()
+            mreg.histogram("exec.compile_seconds").observe(dag_s)
+        else:
+            mreg.histogram("exec.dag_seconds").observe(dag_s)
 
         info = ExecInfo(optimized=optimize)
         info.order = pr.order
@@ -578,4 +630,10 @@ def run_fused(ex, plans, optimize=True, cost_model=None, cache=None):
                                  ex.n_tables)
         out.append((ResultSet(scores=regs[pr.out_reg][0],
                               mask=regs[pr.out_reg][1]), info))
+    mreg.counter("exec.plans").inc(len(out))
+    # physical device programs this call: one per group + one DAG per plan
+    # (per-plan ExecInfo.launches attributes shared group launches to every
+    # consumer, so summing those would overcount)
+    mreg.counter("exec.launches").inc(len(groups) + len(progs))
+    mreg.counter("exec.seeker_runs").inc(len(tasks))
     return out

@@ -26,12 +26,20 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 TRACE_COUNTS = collections.Counter()
 
 
 def _mark_trace(kind: str):
-    """Python-side effect: runs once per jit trace, never per call."""
+    """Python-side effect: runs once per jit trace, never per call.  Also
+    bridged into the metrics registry (``exec.retraces``), so a serving
+    tier with observability enabled sees compile churn without reaching
+    into this module's counter."""
     TRACE_COUNTS[kind] += 1
+    reg = obs.registry()
+    reg.counter("exec.retraces").inc()
+    reg.counter(f"exec.retraces.{kind}").inc()
 
 
 def _first_occurrence(*keys, valid=None):

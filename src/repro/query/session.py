@@ -99,6 +99,7 @@ class Explain:
     index_shape: dict = field(default_factory=dict)   # live-lake observability
     cache: dict = field(default_factory=dict)         # query-cache telemetry
     server: dict = field(default_factory=dict)        # front-tier telemetry
+    metrics: dict = field(default_factory=dict)       # obs registry snapshot
 
     def __str__(self):
         lines = ["== logical plan =="]
@@ -158,6 +159,20 @@ class Explain:
                          f"mean size: {s['batches']['mean_size']:.2f}   "
                          f"launches/batch: "
                          f"{s['launches']['per_batch_mean']:.2f}")
+        if self.metrics:
+            m = self.metrics
+            lines.append("== metrics ==")
+            for name, v in m.get("counters", {}).items():
+                lines.append(f"  {name:<40s} {v:,.0f}")
+            for name, v in m.get("gauges", {}).items():
+                lines.append(f"  {name:<40s} {v:,.1f}")
+            for name, h in m.get("histograms", {}).items():
+                scale, unit = (1e3, "ms") if "seconds" in name \
+                    else (1.0, "")
+                lines.append(f"  {name:<40s} n={h['count']:<7d} "
+                             f"p50={h['p50'] * scale:9.3f}{unit} "
+                             f"p95={h['p95'] * scale:9.3f}{unit} "
+                             f"p99={h['p99'] * scale:9.3f}{unit}")
         lines.append("== physical order (ranked execution groups) ==")
         if self.physical_order:
             for comb, seekers in self.physical_order.items():
@@ -432,7 +447,10 @@ class Session:
         shows the collapsed dispatch count (<= n_kinds + 1).  ``server=``
         attaches front-tier telemetry (``DiscoveryServer.stats()``) rendered
         as the ``== server ==`` section — queue depth, lane occupancy, shed
-        counts, launches per batch."""
+        counts, launches per batch.  With ``repro.obs`` enabled the
+        transcript also carries the process metrics snapshot (``== metrics
+        ==``): explain is a thin reader of the registry, not a second
+        bookkeeping path."""
         compiled = q if isinstance(q, Compiled) else self.compile(q, top=top)
         if compiled.logical is not None:
             tree = compiled.logical.render()
@@ -453,6 +471,7 @@ class Session:
             info, ids = res.info, res.ids
             if res.cache is not None:
                 cache_info = res.cache.as_dict()
+        from repro import obs
         return Explain(logical_tree=tree,
                        applied_rules=list(compiled.applied_rules),
                        physical_order=ranked, exec_order=list(info.order),
@@ -460,7 +479,9 @@ class Session:
                        overflow=info.overflow if execute else 0, ids=ids,
                        launches=info.launches,
                        index_shape=self.index_shape(), cache=cache_info,
-                       server=dict(server) if server else {})
+                       server=dict(server) if server else {},
+                       metrics=obs.registry().snapshot()
+                       if obs.enabled() else {})
 
 
 def _make_cache(cache):

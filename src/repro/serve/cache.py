@@ -32,6 +32,7 @@ from __future__ import annotations
 from collections import OrderedDict
 from dataclasses import dataclass, field
 
+from repro import obs
 from repro.query.fingerprint import (fingerprint_plan, fingerprint_spec,
                                      index_epoch_key)
 
@@ -148,6 +149,7 @@ class QueryCache:
         if key != self._epoch_key:
             if self._epoch_key is not None:
                 self.invalidations += 1
+                obs.registry().counter("cache.invalidations").inc()
             self.results.clear()
             self.seekers.clear()
             self._epoch_key = key
@@ -190,7 +192,11 @@ class QueryCache:
         return fingerprint_spec(spec)
 
     def get_seeker(self, key) -> CachedSeeker | None:
-        return self.seekers.get(key)
+        got = self.seekers.get(key)
+        obs.registry().counter(
+            "cache.seeker.hit" if got is not None else "cache.seeker.miss"
+        ).inc()
+        return got
 
     def put_seeker(self, key, result, overflow, n_tables: int):
         self.seekers.put(key, CachedSeeker(result, overflow),
@@ -204,6 +210,12 @@ class QueryCache:
             self.partial += 1
         else:
             self.misses += 1
+        reg = obs.registry()
+        reg.counter(f"cache.result.{status}").inc()
+        if reg.enabled:
+            reg.gauge("cache.bytes").set(self.resident_bytes)
+            reg.gauge("cache.entries").set(self.entries)
+            reg.gauge("cache.evictions").set(self.evictions)
 
     @property
     def entries(self) -> int:

@@ -13,6 +13,7 @@ import jax
 import numpy as np
 
 from repro.core.executor import ExecInfo
+from repro.obs import trace as otrace
 from repro.query.session import connect
 from repro.train.step import make_prefill_step, make_serve_step
 
@@ -67,6 +68,11 @@ class DiscoveryResponse:
     # evidence behind table_ids; server parity tests assert it bit-identical
     # between batched and sequential serving
     scores: object = None
+    # per-request flight-recorder span tree (obs/trace.py Span), set by
+    # DiscoveryServer(trace=True): queue wait, batch formation, epoch pin,
+    # per-kind probes, per-shard probes, cross-shard merge, drain, host
+    # transfer.  None unless the server is tracing.
+    trace: object = None
 
     @property
     def total_node_seconds(self) -> float:
@@ -199,26 +205,30 @@ class DiscoveryEngine:
         dispatched device work: an exact query-cache hit enqueued nothing,
         so it pays no drain share and its reported latency stays honest."""
         session = self.session
-        if fused:
-            pending = [(res, res.seconds) for res in
-                       session.query_many(queries, optimize=optimize,
-                                          sync=False, fused=True)]
-        else:
-            pending = []
-            for q in queries:
-                t0 = time.perf_counter()
-                res = session.query(q, optimize=optimize, sync=False)
-                pending.append((res, time.perf_counter() - t0))
+        rec = otrace.current()
+        with rec.span("execute", requests=len(queries), fused=fused):
+            if fused:
+                pending = [(res, res.seconds) for res in
+                           session.query_many(queries, optimize=optimize,
+                                              sync=False, fused=True)]
+            else:
+                pending = []
+                for q in queries:
+                    t0 = time.perf_counter()
+                    res = session.query(q, optimize=optimize, sync=False)
+                    pending.append((res, time.perf_counter() - t0))
         hot = [res for res, _ in pending if self._dispatched(res)]
         t0 = time.perf_counter()
-        jax.block_until_ready([res.scores for res in hot])
+        with rec.span("drain", dispatched=len(hot)):
+            jax.block_until_ready([res.scores for res in hot])
         drain_share = (time.perf_counter() - t0) / max(len(hot), 1)
         # one host transfer for the whole batch's (scores, mask) pairs —
         # per-response device_get round-trips are a measurable share of the
         # warm batched path
-        fetched = jax.device_get([(res.scores, res.result.mask)
-                                  for res, _ in pending])
-        ExecInfo.materialize_overflow([res.info for res, _ in pending])
+        with rec.span("transfer"):
+            fetched = jax.device_get([(res.scores, res.result.mask)
+                                      for res, _ in pending])
+            ExecInfo.materialize_overflow([res.info for res, _ in pending])
         out = []
         for (res, dispatch_s), (s, m) in zip(pending, fetched):
             s, m = np.asarray(s), np.asarray(m)

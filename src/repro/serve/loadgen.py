@@ -213,6 +213,9 @@ class ReplayReport:
             "queue_ms_p50": round(float(np.percentile(
                 np.asarray(self.queue_s), 50) * 1e3), 3)
             if self.queue_s else 0.0,
+            "queue_ms_p99": round(float(np.percentile(
+                np.asarray(self.queue_s), 99) * 1e3), 3)
+            if self.queue_s else 0.0,
             "batch_size_mean": round(float(np.mean(self.batch_sizes)), 2)
             if self.batch_sizes else 0.0,
             "batch_occupancy_hist":

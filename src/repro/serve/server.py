@@ -41,12 +41,18 @@ the same futures awaited via ``asyncio.wrap_future``.
 """
 from __future__ import annotations
 
+import contextlib
 import threading
 import time
+from collections import deque
 from concurrent.futures import Future
 from contextlib import nullcontext
 from dataclasses import dataclass
 
+from repro import obs
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_RECORDER, Recorder, Span, dump_chrome, \
+    recording
 from repro.serve.batching import (BATCH, INTERACTIVE, SHED_RATE_LIMIT,
                                   BatchFormer, Barrier, Batch, LaneConfig,
                                   RateLimiter)
@@ -91,7 +97,15 @@ class DiscoveryServer:
     ``rate`` / ``burst`` / ``per_tenant`` configure token buckets
     (``rate=None``: unlimited), ``optimize`` / ``fused`` set the engine
     defaults.  ``start=False`` leaves the dispatcher parked (deterministic
-    queue tests); ``now`` injects the clock for admission decisions."""
+    queue tests); ``now`` injects the clock for admission decisions.
+
+    Observability: all serving telemetry lives in ``self.metrics`` — the
+    process registry when ``repro.obs`` is enabled (or an explicit
+    ``metrics=`` registry), else a private one so :meth:`stats` always
+    works.  ``trace=True`` turns on the per-request flight recorder: every
+    response carries its span tree (``DiscoveryResponse.trace``), the last
+    ``trace_capacity`` request trees are retained, and
+    :meth:`dump_trace` exports them as Chrome trace-event JSON."""
 
     def __init__(self, engine, *, max_batch: int = 16,
                  interactive_window_s: float = 0.002,
@@ -101,7 +115,9 @@ class DiscoveryServer:
                  rate: float | None = None, burst: float | None = None,
                  per_tenant: dict | None = None,
                  optimize: bool = True, fused: bool = True,
-                 start: bool = True, now=time.monotonic):
+                 start: bool = True, now=time.monotonic,
+                 trace: bool = False, trace_capacity: int = 256,
+                 metrics: MetricsRegistry | None = None):
         self.engine = engine if isinstance(engine, DiscoveryEngine) \
             else DiscoveryEngine(engine)
         self.optimize, self.fused = optimize, fused
@@ -120,10 +136,13 @@ class DiscoveryServer:
         #: toward (inf for an idle wait).  submit uses it to wake the
         #: dispatcher only when an arrival changes its plan.
         self._sleep_deadline: float | None = None
-        self._served = 0
-        self._mutations_done = 0
-        self._launches_total = 0
-        self._launches_last_batch = 0
+        self.metrics = metrics if metrics is not None else (
+            obs.registry() if obs.enabled() else MetricsRegistry(now=now))
+        self._trace = trace
+        #: flight recorder: span trees of the most recent requests
+        self._flight: deque = deque(maxlen=trace_capacity)
+        # pre-bound hot-path instruments (one dict lookup saved per submit)
+        self._m_submitted = self.metrics.counter("server.submitted")
         self._thread: threading.Thread | None = None
         if start:
             self.start()
@@ -177,14 +196,18 @@ class DiscoveryServer:
             now = self._now()
             ok, retry = self._limiter.admit(tenant, now=now)
             if not ok:
+                self.metrics.counter(
+                    f"server.shed.{SHED_RATE_LIMIT}").inc()
                 fut.set_result(Overloaded(SHED_RATE_LIMIT, lane, tenant,
                                           retry_after_s=retry))
                 return fut
             pending, reason = self._former.submit(job, lane=lane,
                                                   tenant=tenant, now=now)
             if pending is None:
+                self.metrics.counter(f"server.shed.{reason}").inc()
                 fut.set_result(Overloaded(reason, lane, tenant))
                 return fut
+            self._m_submitted.inc()
             self._wake(now + self._former.lanes[lane].window_s)
         return fut
 
@@ -268,44 +291,84 @@ class DiscoveryServer:
     def _run_batch(self, batch: Batch):
         start = self._now()
         jobs = [p.payload for p in batch.requests]
+        reg = self.metrics
+        rec = Recorder(now=self._now) if self._trace else NULL_RECORDER
         try:
-            with self._engine_lock, self._epoch_barrier():
-                responses: list = [None] * len(jobs)
-                # per-request optimize overrides partition the batch; each
-                # partition is still one fused serve_many call
-                by_opt: dict = {}
-                for i, job in enumerate(jobs):
-                    by_opt.setdefault(job.optimize, []).append(i)
-                for opt, idxs in by_opt.items():
-                    out = self.engine.serve_many(
-                        [jobs[i].query for i in idxs], optimize=opt,
-                        fused=self.fused)
-                    for i, resp in zip(idxs, out):
-                        responses[i] = resp
+            with recording(rec), \
+                    rec.span("batch", tid="dispatcher",
+                             requests=len(jobs)) as bspan:
+                with contextlib.ExitStack() as stack:
+                    # pin_epoch measures lock + mutation-barrier wait; the
+                    # barrier stays held for the whole dispatch below
+                    with rec.span("pin_epoch"):
+                        stack.enter_context(self._engine_lock)
+                        stack.enter_context(self._epoch_barrier())
+                    responses: list = [None] * len(jobs)
+                    # per-request optimize overrides partition the batch;
+                    # each partition is still one fused serve_many call
+                    by_opt: dict = {}
+                    for i, job in enumerate(jobs):
+                        by_opt.setdefault(job.optimize, []).append(i)
+                    for opt, idxs in by_opt.items():
+                        out = self.engine.serve_many(
+                            [jobs[i].query for i in idxs], optimize=opt,
+                            fused=self.fused)
+                        for i, resp in zip(idxs, out):
+                            responses[i] = resp
         except BaseException as e:                   # noqa: BLE001
+            reg.counter("server.batch_errors").inc()
             for job in jobs:
                 if not job.future.done():
                     job.future.set_exception(e)
             return
-        self._launches_last_batch = max(r.launches for r in responses)
-        self._launches_total += self._launches_last_batch
+        end = self._now()
+        launches = max(r.launches for r in responses)
+        reg.counter("server.served").inc(len(jobs))
+        reg.counter("server.batches").inc()
+        reg.counter("server.launches").inc(launches)
+        reg.gauge("server.launches_last_batch").set(launches)
+        reg.histogram("server.batch_size", lo=1.0).observe(len(jobs))
+        reg.histogram("server.batch_seconds").observe(end - start)
+        for d_lane, d in self._former.depth().items():
+            reg.gauge(f"server.queue_depth.{d_lane}").set(d)
         for p, job, resp in zip(batch.requests, jobs, responses):
             resp.queue_seconds = max(start - p.enqueue_s, 0.0)
             resp.batch_size = len(batch.requests)
-            self._served += 1
+            reg.histogram(f"server.queue_seconds.{p.lane}").observe(
+                resp.queue_seconds)
+            reg.histogram(f"server.e2e_seconds.{p.lane}").observe(
+                max(end - p.enqueue_s, 0.0))
+            if self._trace:
+                # per-request tree: its own queue wait, then the (shared)
+                # batch subtree — chrome_trace emits shared subtrees once.
+                # queue + batch are contiguous wall-clock intervals, so the
+                # root's children tile its whole [enqueue, end] extent.
+                root = Span("request", t0=min(p.enqueue_s, start), t1=end,
+                            tid=f"req-{p.seq}",
+                            attrs={"lane": p.lane, "tenant": p.tenant,
+                                   "batch_size": len(batch.requests)})
+                root.children.append(
+                    Span("queue", t0=root.t0, t1=start, tid=root.tid))
+                root.children.append(bspan)
+                resp.trace = root
+                self._flight.append(root)
             if not job.future.cancelled():
                 job.future.set_result(resp)
 
     def _run_barrier(self, barrier: Barrier):
         job = barrier.request.payload
+        t0 = self._now()
         try:
             with self._engine_lock:
                 out = getattr(self.engine, job.op)(*job.args, **job.kwargs)
         except BaseException as e:                   # noqa: BLE001
+            self.metrics.counter("server.mutation_errors").inc()
             if not job.future.done():
                 job.future.set_exception(e)
             return
-        self._mutations_done += 1
+        self.metrics.counter("server.mutations").inc()
+        self.metrics.histogram("server.mutation_seconds").observe(
+            self._now() - t0)
         if not job.future.cancelled():
             job.future.set_result(out)
 
@@ -317,10 +380,13 @@ class DiscoveryServer:
     def stats(self) -> dict:
         """Serving telemetry: queue depth and occupancy per lane, shed
         counts by reason/lane/tenant, batch-size histogram, aggregate
-        launches per batch, mutation counters."""
+        launches per batch, mutation counters.  A thin reader: all serving
+        counters live in ``self.metrics`` (admission/queue-shape state stays
+        in the BatchFormer/RateLimiter, which own those decisions)."""
         with self._cond:
             f = self._former
             s = f.stats
+            reg = self.metrics
             depth = f.depth()
             occupancy = {
                 name: {"depth": depth[name], "max_queue": cfg.max_queue,
@@ -329,10 +395,11 @@ class DiscoveryServer:
             rate_sheds = sum(self._limiter.sheds.values())
             queue_sheds = sum(s.shed.values())
             batches = max(s.batches, 1)
+            launches_total = int(reg.counter("server.launches").value)
             return {
                 "running": self._thread is not None
                 and self._thread.is_alive(),
-                "served": self._served,
+                "served": int(reg.counter("server.served").value),
                 "queue_depth": depth,
                 "lane_occupancy": occupancy,
                 "shed": {SHED_RATE_LIMIT: rate_sheds, **s.shed,
@@ -345,13 +412,22 @@ class DiscoveryServer:
                             "mean_size": s.batched_requests / batches,
                             "size_hist": {str(k): v for k, v in
                                           sorted(s.batch_size_hist.items())}},
-                "launches": {"total": self._launches_total,
-                             "per_batch_mean":
-                                 self._launches_total / batches,
-                             "last_batch": self._launches_last_batch},
-                "mutations": {"executed": self._mutations_done,
+                "launches": {"total": launches_total,
+                             "per_batch_mean": launches_total / batches,
+                             "last_batch": int(reg.gauge(
+                                 "server.launches_last_batch").value)},
+                "mutations": {"executed": int(reg.counter(
+                                  "server.mutations").value),
                               "pending": depth[f.MUTATION_LANE]},
             }
+
+    def dump_trace(self, path):
+        """Export the flight recorder (the last ``trace_capacity`` request
+        span trees) as Chrome trace-event JSON loadable in Perfetto /
+        ``chrome://tracing``; returns ``path``."""
+        with self._cond:
+            roots = list(self._flight)
+        return dump_chrome(roots, path)
 
     def explain(self, query, **kw):
         """``session.explain`` with the server's stats attached (rendered as

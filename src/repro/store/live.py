@@ -24,6 +24,7 @@ from __future__ import annotations
 import threading
 from contextlib import contextmanager
 
+from repro import obs
 from repro.store.compact import CompactionPolicy, compact_store, maybe_compact
 from repro.store.segments import SegmentStore
 from repro.store import snapshot as snap
@@ -67,7 +68,7 @@ class LiveLake:
             yield self
 
     def add_table(self, table, name: str | None = None) -> int:
-        with self._barrier:
+        with self._barrier, obs.registry().timer("store.add_table_seconds"):
             tid = self.store.add_table(table, name=name)
             self.tables[tid] = table
             if self.auto_compact:
@@ -75,27 +76,50 @@ class LiveLake:
                     self.store.maybe_compact(self.policy)
                 else:
                     maybe_compact(self.store, self.policy)
+            self._note_shape()
             return tid
 
     def drop_table(self, ref) -> int:
-        with self._barrier:
+        with self._barrier, obs.registry().timer("store.drop_table_seconds"):
             tid = self.store.drop_table(ref)
             self.tables.pop(tid, None)
+            self._note_shape()
             return tid
 
     def compact(self, full: bool = True, reclaim_ids: bool = False):
         """Explicit compaction; with ``reclaim_ids`` returns the old->new
         table-id mapping (and re-keys the Table registry)."""
-        with self._barrier:
+        with self._barrier, obs.registry().timer("store.compact_seconds"):
             if hasattr(self.store, "shards"):    # sharded: shard-local merges
-                return self.store.compact(self.policy, full=full,
-                                          reclaim_ids=reclaim_ids)
+                remap = self.store.compact(self.policy, full=full,
+                                           reclaim_ids=reclaim_ids)
+                self._note_shape()
+                return remap
             remap = compact_store(self.store, self.policy, full=full,
                                   reclaim_ids=reclaim_ids)
             if remap is not None:
                 self.tables = {remap[t]: tab for t, tab in
                                self.tables.items() if t in remap}
+            self._note_shape()
             return remap
+
+    def _note_shape(self):
+        """Post-mutation store-shape gauges.  ``compaction_debt`` is how far
+        the segment count sits past the policy threshold — a growing debt
+        means mutations are outrunning (or auto-compaction is not keeping up
+        with) the size-tiered merge."""
+        reg = obs.registry()
+        if not reg.enabled:
+            return
+        s = self.store
+        n_seg = len(s.segments)
+        n_shards = len(s.shards) if hasattr(s, "shards") else 1
+        reg.gauge("store.segments").set(n_seg)
+        reg.gauge("store.postings").set(s.n_postings)
+        reg.gauge("store.tombstones").set(len(s.pending_dead))
+        reg.gauge("store.live_tables").set(len(s.live_ids()))
+        reg.gauge("store.compaction_debt").set(
+            max(0, n_seg - self.policy.max_segments * n_shards))
 
     # ----------------------------------------------------------- persistence
     def snapshot(self, path):

@@ -1,0 +1,338 @@
+"""Observability unit + integration tests: histogram bucketing and
+percentile snapshots on a fake clock, span nesting/ordering, the Chrome
+trace-event export schema, the per-request flight recorder (span presence
+and queue+batch coverage of end-to-end latency), metrics flowing from every
+instrumented layer, and parity — tracing/metrics/sync-timing change no ids
+and no scores."""
+import json
+import math
+
+import numpy as np
+import pytest
+
+import blend
+from repro import obs
+from repro.core.lake import synthetic_lake
+from repro.obs.metrics import (Histogram, MetricsRegistry, NULL_REGISTRY,
+                               NullRegistry)
+from repro.obs.trace import (NULL_RECORDER, Recorder, Span, chrome_trace,
+                             current, recording)
+from repro.serve.engine import DiscoveryEngine
+from repro.serve.server import DiscoveryServer
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+        return self.t
+
+
+@pytest.fixture(autouse=True)
+def _obs_off():
+    """Every test starts and ends with observability disabled."""
+    obs.disable()
+    yield
+    obs.disable()
+
+
+# ------------------------------------------------------------------ metrics
+
+def test_histogram_bucket_index_and_edges():
+    h = Histogram("t", lo=1e-3, growth=2.0, n_buckets=8)
+    assert h.bucket_index(0.0) == 0
+    assert h.bucket_index(5e-4) == 0
+    assert h.bucket_index(1e-3) == 1          # [lo, 2*lo)
+    assert h.bucket_index(1.9e-3) == 1
+    assert h.bucket_index(2.1e-3) == 2
+    assert h.bucket_index(1e9) == 7           # clamps to last bucket
+    lo, hi = h.bucket_edges(1)
+    assert lo == pytest.approx(1e-3) and hi == pytest.approx(2e-3)
+    assert h.bucket_edges(0) == (0.0, 1e-3)
+
+
+def test_histogram_percentiles_bucket_resolution():
+    h = Histogram("t", lo=1e-3, growth=2.0, n_buckets=32)
+    for v in [0.002] * 50 + [0.016] * 49 + [1.0]:
+        h.observe(v)
+    # p50 lands in 0.002's bucket: within a factor sqrt(2) of the true value
+    p50 = h.percentile(50)
+    assert 0.002 / math.sqrt(2) <= p50 <= 0.002 * math.sqrt(2)
+    p95 = h.percentile(95)
+    assert 0.016 / math.sqrt(2) <= p95 <= 0.016 * math.sqrt(2)
+    # the top observation lands in [0.512, 1.024): its reported quantile is
+    # bucket-resolution but never exceeds the exact observed max
+    assert 0.512 <= h.percentile(99.9) <= h.max == 1.0
+    snap = h.snapshot()
+    assert snap["count"] == 100
+    assert snap["min"] == 0.002 and snap["max"] == 1.0
+    assert snap["mean"] == pytest.approx(h.sum / 100)
+
+
+def test_histogram_single_value_percentile_exact():
+    h = Histogram("t")
+    h.observe(0.125)
+    # clamped into [min, max]: a single-value distribution reports exactly
+    for q in (50, 95, 99):
+        assert h.percentile(q) == 0.125
+
+
+def test_histogram_empty_snapshot():
+    snap = Histogram("t").snapshot()
+    assert snap == {"count": 0, "sum": 0.0, "mean": 0.0, "min": 0.0,
+                    "max": 0.0, "p50": 0.0, "p95": 0.0, "p99": 0.0}
+
+
+def test_registry_timer_fake_clock():
+    clock = FakeClock()
+    reg = MetricsRegistry(now=clock)
+    with reg.timer("op_seconds"):
+        clock.advance(0.25)
+    h = reg.histogram("op_seconds")
+    assert h.count == 1 and h.sum == pytest.approx(0.25)
+    assert h.percentile(50) == pytest.approx(0.25)
+
+
+def test_registry_counters_gauges_and_snapshot():
+    reg = MetricsRegistry()
+    reg.counter("c").inc()
+    reg.counter("c").inc(2)
+    reg.gauge("g").set(7)
+    reg.gauge("g").dec(3)
+    snap = reg.snapshot()
+    assert snap["counters"]["c"] == 3.0
+    assert snap["gauges"]["g"] == 4.0
+    assert reg.render()                        # renders without error
+    # one name, one meaning
+    with pytest.raises(TypeError):
+        reg.gauge("c")
+
+
+def test_null_registry_is_shared_noop():
+    assert NULL_REGISTRY.counter("a") is NULL_REGISTRY.counter("b")
+    NULL_REGISTRY.counter("a").inc(100)
+    assert NULL_REGISTRY.counter("a").value == 0.0
+    with NULL_REGISTRY.timer("x"):
+        pass
+    assert NULL_REGISTRY.snapshot() == {"counters": {}, "gauges": {},
+                                        "histograms": {}}
+    assert not NullRegistry.enabled
+
+
+def test_enable_disable_and_sync_timing():
+    assert not obs.enabled()
+    assert obs.registry() is NULL_REGISTRY
+    reg = obs.enable(sync_timing=True)
+    assert obs.enabled() and obs.registry() is reg and obs.sync_timing()
+    reg.counter("x").inc()
+    # enable() makes a FRESH registry: no cross-test pollution
+    reg2 = obs.enable()
+    assert reg2 is not reg and reg2.counter("x").value == 0.0
+    obs.disable()
+    assert obs.registry() is NULL_REGISTRY and not obs.sync_timing()
+
+
+# ------------------------------------------------------------------ tracing
+
+def test_span_nesting_and_ordering_fake_clock():
+    clock = FakeClock()
+    rec = Recorder(now=clock)
+    with rec.span("outer") as outer:
+        clock.advance(1.0)
+        with rec.span("a", key="v"):
+            clock.advance(2.0)
+        with rec.span("b"):
+            clock.advance(3.0)
+    assert rec.roots == [outer]
+    assert outer.t0 == 0.0 and outer.t1 == 6.0
+    assert [c.name for c in outer.children] == ["a", "b"]
+    a, b = outer.children
+    assert (a.t0, a.t1) == (1.0, 3.0)
+    assert (b.t0, b.t1) == (3.0, 6.0)
+    assert a.attrs == {"key": "v"}
+    assert outer.duration == 6.0
+    assert [s.name for s in outer.walk()] == ["outer", "a", "b"]
+    assert outer.find("b") is b and outer.find("zzz") is None
+    assert "outer" in outer.render() and "a" in outer.render()
+
+
+def test_recorder_record_premeasured_interval():
+    rec = Recorder(now=FakeClock(10.0))
+    with rec.span("root"):
+        s = rec.record("queue", t0=4.0, t1=9.0, lane="interactive")
+    assert rec.roots[0].children == [s]
+    assert s.duration == pytest.approx(5.0)
+
+
+def test_recording_contextvar():
+    assert current() is NULL_RECORDER
+    rec = Recorder()
+    with recording(rec):
+        assert current() is rec
+        with current().span("x"):
+            pass
+    assert current() is NULL_RECORDER
+    assert rec.roots[0].name == "x"
+    # null recorder spans are inert and reusable
+    with NULL_RECORDER.span("y") as s:
+        assert s.set("a", 1) is s and s.duration == 0.0
+
+
+def test_chrome_trace_schema_and_shared_subtree_once():
+    clock = FakeClock()
+    rec = Recorder(now=clock)
+    with rec.span("batch", tid="dispatcher") as bspan:
+        clock.advance(2.0)
+    r1 = Span("request", t0=0.0, t1=2.0, tid="req-1", children=[bspan])
+    r2 = Span("request", t0=0.0, t1=2.0, tid="req-2", children=[bspan])
+    doc = chrome_trace([r1, r2])
+    evs = doc["traceEvents"]
+    assert isinstance(evs, list) and doc["displayTimeUnit"] == "ms"
+    xs = [e for e in evs if e["ph"] == "X"]
+    ms = [e for e in evs if e["ph"] == "M"]
+    assert len(xs) + len(ms) == len(evs)
+    for e in xs:
+        assert set(e) >= {"name", "ph", "pid", "tid", "ts", "dur", "args"}
+        assert e["ts"] >= 0.0 and e["dur"] >= 0.0
+    # the shared batch subtree is emitted exactly once
+    assert sum(1 for e in xs if e["name"] == "batch") == 1
+    assert sum(1 for e in xs if e["name"] == "request") == 2
+    assert {e["args"]["name"] for e in ms} >= {"dispatcher", "req-1",
+                                               "req-2"}
+    json.dumps(doc)                            # JSON-serializable end to end
+
+
+# --------------------------------------------------------- serving stack
+
+def obs_lake():
+    return synthetic_lake(n_tables=16, rows=14, cols=4, vocab=200, seed=9)
+
+
+def obs_queries(lake, k=20):
+    t = lake.tables[3]
+    sc = blend.sc(list(t.columns[0][:8]), k=k)
+    kw = blend.kw([t.columns[1][0], t.columns[1][2]], k=k)
+    mc = blend.mc([(t.columns[0][r], t.columns[1][r]) for r in range(4)],
+                  k=k)
+    return [(sc & mc).top(10), (sc | kw).top(10), (mc - kw).top(10)]
+
+
+def test_flight_recorder_and_metrics_end_to_end(tmp_path):
+    lake = obs_lake()
+    queries = obs_queries(lake)
+    reg = obs.enable()
+    with DiscoveryServer(DiscoveryEngine(lake, live=True, cache=True),
+                         trace=True) as srv:
+        resps = [f.result() for f in
+                 [srv.submit(q) for q in queries for _ in range(2)]]
+        # a repeat pass is served from the exact-result cache: it still
+        # records a trace (queue/batch), just no probe work
+        hits = [f.result() for f in [srv.submit(q) for q in queries]]
+        assert all(h.trace is not None and h.trace.find("queue")
+                   for h in hits)
+        for r in resps:
+            root = r.trace
+            assert root is not None and root.name == "request"
+            names = [s.name for s in root.walk()]
+            for need in ("queue", "batch", "pin_epoch", "drain", "transfer",
+                         "merge"):
+                assert need in names, names
+            assert any(n.startswith("probe:") for n in names)
+            assert any(n.startswith("shard:") for n in names)
+            # queue + batch are contiguous: spans cover end-to-end latency
+            covered = sum(c.duration for c in root.children)
+            assert covered == pytest.approx(root.duration, rel=0.10)
+            # and the response's own telemetry agrees with the tree
+            assert root.find("queue").duration == \
+                pytest.approx(r.queue_seconds, abs=2e-3)
+        # metrics flowed from every instrumented layer
+        snap = reg.snapshot()
+        assert snap["counters"]["server.served"] >= 9
+        assert snap["counters"]["exec.plans"] >= 1
+        assert snap["counters"]["cache.result.miss"] >= 1
+        assert "server.batch_seconds" in snap["histograms"]
+        assert "shard.probe_seconds.0" in snap["histograms"]
+        # stats() is a thin reader of the same registry
+        st = srv.stats()
+        assert st["served"] == int(reg.counter("server.served").value)
+        assert st["mutations"]["executed"] == 0
+        # explain carries the metrics snapshot
+        assert "== metrics ==" in str(srv.explain(queries[0]))
+        # flight-recorder export is valid Chrome trace JSON
+        path = srv.dump_trace(tmp_path / "trace.json")
+        doc = json.loads((tmp_path / "trace.json").read_text())
+        assert path == tmp_path / "trace.json"
+        evs = doc["traceEvents"]
+        assert evs and all(e["ph"] in ("X", "M") for e in evs)
+        assert any(e["ph"] == "X" and e["name"] == "request" for e in evs)
+
+
+def test_store_mutation_metrics():
+    lake = obs_lake()
+    reg = obs.enable()
+    session = blend.connect(lake, live=True)
+    t = lake.tables[0]
+    tid = session.add_table(t)
+    session.drop_table(tid)
+    session.compact()
+    snap = reg.snapshot()
+    for name in ("store.add_table_seconds", "store.drop_table_seconds",
+                 "store.compact_seconds"):
+        assert snap["histograms"][name]["count"] == 1
+    for g in ("store.segments", "store.postings", "store.live_tables",
+              "store.compaction_debt", "store.tombstones"):
+        assert g in snap["gauges"]
+    assert snap["gauges"]["store.segments"] >= 1
+
+
+def test_retrace_counter_bridges_trace_counts():
+    from repro.core import seekers as seek
+    reg = obs.enable()
+    seek._mark_trace("TEST_KIND")
+    assert reg.counter("exec.retraces").value == 1
+    assert reg.counter("exec.retraces.TEST_KIND").value == 1
+    seek.TRACE_COUNTS.pop("TEST_KIND", None)
+
+
+def test_observability_changes_no_ids_or_scores():
+    """Parity: tracing + metrics + synchronized timing are observation only."""
+    lake = obs_lake()
+    queries = obs_queries(lake)
+    with DiscoveryServer(DiscoveryEngine(lake, live=True)) as srv:
+        base = [f.result() for f in [srv.submit(q) for q in queries]]
+    obs.enable(sync_timing=True)
+    with DiscoveryServer(DiscoveryEngine(lake, live=True),
+                         trace=True) as srv:
+        traced = [f.result() for f in [srv.submit(q) for q in queries]]
+    for b, t in zip(base, traced):
+        assert b.table_ids == t.table_ids
+        np.testing.assert_array_equal(np.asarray(b.scores),
+                                      np.asarray(t.scores))
+
+
+def test_server_uses_private_registry_when_disabled():
+    lake = obs_lake()
+    with DiscoveryServer(DiscoveryEngine(lake)) as srv:
+        srv.serve(obs_queries(lake)[0])
+        st = srv.stats()
+        assert st["served"] == 1
+        # nothing leaked into the (disabled) global registry
+        assert obs.registry() is NULL_REGISTRY
+        assert srv.metrics is not NULL_REGISTRY
+
+
+def test_loadgen_report_queue_percentiles():
+    from repro.serve.loadgen import ReplayReport
+    rep = ReplayReport(offered=4, completed=4, shed=0, mutations=0,
+                       makespan_s=1.0, latencies_s=[0.01, 0.02, 0.03, 0.04],
+                       queue_s=[0.001, 0.002, 0.003, 0.1],
+                       batch_sizes=[2, 2, 2, 2], shed_reasons={},
+                       server_stats={"batches": {"size_hist": {}}})
+    d = rep.as_dict()
+    assert d["queue_ms_p50"] > 0
+    assert d["queue_ms_p99"] >= d["queue_ms_p50"]
