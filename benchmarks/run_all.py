@@ -28,7 +28,11 @@ queues at the heaviest offered load).  The same subprocess also writes
 p50/p99 per offered load, tier throughput with instrumentation disabled /
 metrics-only / metrics+tracing (acceptance: disabled path costs <= 2% vs
 the BENCH_7 tier baseline from the same run), and per-request trace span
-coverage.
+coverage.  ``BENCH_9.json`` records the approximate-discovery workloads
+(benchmarks/sketch_bench.py, its own process): approx-vs-exact p50 and
+recall@10 per seeker kind at 1k/10k (CI smoke) or 1k/10k/100k columns
+(``--full``), plus the escalation-rate/recall curve vs epsilon
+(acceptance: >= 3x p50 at <= 5% recall loss on the largest scale).
 
     PYTHONPATH=src python benchmarks/run_all.py [--out PATH] [--full]
 
@@ -441,6 +445,20 @@ def main(out_path: Path, full: bool = False, iters: int = 10) -> dict:
     else:
         print(f"serving bench failed (exit {r.returncode}); "
               f"skipping {serving_path}")
+
+    # approximate discovery: own process so the scale lakes (up to 100k
+    # columns under --full) are built and freed outside this runner's heap.
+    sketch_path = out_path.parent / "BENCH_9.json"
+    r = subprocess.run(
+        [sys.executable, str(REPO_ROOT / "benchmarks/sketch_bench.py"),
+         "--out", str(sketch_path), "--iters", str(iters),
+         "--scales", "1000,10000,100000" if full else "1000,10000"],
+        check=False)
+    if r.returncode == 0:
+        print(f"wrote {sketch_path}")
+    else:
+        print(f"sketch bench failed (exit {r.returncode}); "
+              f"skipping {sketch_path}")
 
     for name, s in {**workloads, **live, **cache, **fused}.items():
         extra = "".join(

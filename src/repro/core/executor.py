@@ -32,6 +32,7 @@ from repro.core.index import UnifiedIndex
 from repro.core.match import MatchEngine
 from repro.core.optimizer import optimize as optimize_plan
 from repro.core.plan import Plan, SeekerSpec
+from repro.core import sketch as sk
 
 # the match-capacity ladder: every seeker launch uses one of these static
 # capacities, so the jit cache holds at most len(CAP_LADDER) variants per
@@ -149,6 +150,9 @@ class Executor:
         self._hash_cache: dict = {}
         self._hash_cache_max = 1 << 20
         self._in_plan = False
+        #: approximate tier: dense sketch packs, memoized per (epoch,
+        #: geometry) — rebuilt lazily like the MatchEngine, never mid-query
+        self._sketch_views_memo = None
 
     # ---------------------------------------------------------- live engine
     def _build_engine(self):
@@ -245,6 +249,114 @@ class Executor:
     def _mcap_for(self, hashes: np.ndarray) -> int:
         counts = self.index.host_counts(hashes)
         return self._quantize_cap(int(counts.max(initial=1)))
+
+    # ----------------------------------------------------------- sketch tier
+    def _sketch_sources(self):
+        """[(sketch_map, alive_mask, device)] — one entry per device pack.
+        The sharded executor overrides this with one entry per shard; the
+        base executor serves one pack on the default device."""
+        idx = self.index
+        if hasattr(idx, "sketch_map"):            # LiveLake SegmentStore
+            return [(idx.sketch_map(), None, None)]
+        return [(getattr(idx, "sketches", None) or {}, None, None)]
+
+    def sketch_views(self):
+        """Sorted sketch-posting views (core/sketch.py ``SketchView``),
+        memoized per (epoch, geometry): probe cost is O(|Q| log + matches)
+        — independent of posting count AND of table count — and the view
+        only rebuilds when the index epoch or capacity changes, so probes
+        never re-sort across repeated queries."""
+        key = (getattr(self.index, "epoch", None), self.n_tables,
+               self.max_cols)
+        memo = self._sketch_views_memo
+        if memo is None or memo[0] != key:
+            cfg = getattr(self.index, "sketch_config", None) \
+                or sk.SketchConfig()
+            views = [sk.build_view(m, self.n_tables, self.max_cols, cfg,
+                                   alive=alive)
+                     for m, alive, _dev in self._sketch_sources()]
+            self._sketch_views_memo = (key, views)
+        return self._sketch_views_memo[1]
+
+    def sketch_probe(self, spec: SeekerSpec,
+                     confidence: float = 0.95) -> sk.SketchProbeResult:
+        """Estimate one seeker's per-table scores from the sketch tier.
+
+        Runs the host probe on every view (per shard on a sharded lake) and
+        merges with one elementwise sum — each table's slots are nonzero on
+        exactly one view, so the merge is exact and the 1-vs-N shard
+        results are bit-identical.  MC has no sketch estimator (raises
+        ValueError; the session falls back to the exact path)."""
+        if not self._in_plan:
+            self.refresh()
+        t0 = time.perf_counter()
+        from repro.obs import trace as otrace
+        rec = otrace.current()
+        views = self.sketch_views()
+
+        def dispatch(make):
+            outs = []
+            for i, view in enumerate(views):
+                with rec.span("sketch.probe.pack", kind=spec.kind, pack=i):
+                    outs.append(make(view))
+            return [sum(parts) for parts in zip(*outs)]
+
+        if spec.kind in ("SC", "KW"):
+            # distinct query hashes: the exact seekers are COUNT(DISTINCT)
+            h = np.unique(self._hashed(spec.values))
+            # a table score is a max over per-column intervals: Bonferroni
+            # the per-column confidence so the max's interval holds jointly
+            comparisons = self.max_cols if spec.kind == "SC" else 1
+            z = sk.z_for(confidence, comparisons)
+            level = "col" if spec.kind == "SC" else "tbl"
+            lo, hi, est, ci_lo, ci_hi = dispatch(
+                lambda v: v.containment(h, z, level=level))
+            out = sk.SketchProbeResult(
+                kind=spec.kind, estimator="kmv-bottomk", est=est,
+                bound_lo=lo, bound_hi=hi, ci_lo=ci_lo, ci_hi=ci_hi,
+                sound=True)
+        elif spec.kind == "C":
+            pairs = list(dict.fromkeys(zip(spec.values, spec.target)))
+            h = self._hash_many([p[0] for p in pairs])
+            tgt = np.array([float(p[1]) for p in pairs])
+            qbit = (tgt >= tgt.mean()).astype(np.int8)
+            # dedupe join hashes keeping the first pair's quadrant bit (the
+            # exact seeker probes in first-occurrence order too)
+            hu, first = np.unique(h, return_index=True)
+            qb = qbit[first]
+            # the score is a max over (join col, numeric col) pairs
+            z = sk.z_for(confidence, self.max_cols ** 2)
+
+            def make(view):
+                est, lo, hi, support = view.correlation(
+                    hu, qb, z, min_support=sk.SAMPLE_MIN_SUPPORT)
+                # sound join gate: zero containment upper bound over the
+                # join values => the table cannot join => exact score is 0
+                _, cont_hi, _, _, _ = view.containment(hu, 0.0, level="col")
+                return est, lo, hi, support, cont_hi
+
+            est, ci_lo, ci_hi, support, cont_hi = dispatch(make)
+            impossible = cont_hi <= 0
+            # joinable but unseen in the sample: report the uninformative
+            # interval instead of a falsely tight one
+            no_est = (support <= 0) & ~impossible
+            est = np.where(support > 0, est, 0.0).astype(np.float32)
+            ci_lo = np.where(support > 0, ci_lo, 0.0).astype(np.float32)
+            ci_hi = np.where(impossible, 0.0,
+                             np.where(no_est, 1.0, ci_hi)).astype(np.float32)
+            out = sk.SketchProbeResult(
+                kind="C", estimator="sample-qcr", est=est, bound_lo=ci_lo,
+                bound_hi=ci_hi, ci_lo=ci_lo, ci_hi=ci_hi, sound=False,
+                impossible=impossible)
+        else:
+            raise ValueError(
+                f"no sketch estimator for seeker kind {spec.kind!r}")
+        out.seconds = time.perf_counter() - t0
+        out.launches = 0                 # host-side probe: no device programs
+        reg = obs.registry()
+        reg.counter("approx.sketch_probes").inc()
+        reg.histogram("approx.probe_seconds").observe(out.seconds)
+        return out
 
     # --------------------------------------------------------------- seekers
     def run_seeker(self, spec: SeekerSpec, allowed=None,

@@ -24,12 +24,13 @@ Auxiliary views derived from the same arrays (not separate indexes):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
 from repro.core import hashing
 from repro.core.lake import DataLake
+from repro.core.sketch import SketchConfig, sketch_tables
 
 def _ceil_pow2(n: int) -> int:
     m = 1
@@ -93,6 +94,11 @@ class UnifiedIndex:
     # than the longest table aliases rowkeys across tables (validated by
     # ``validate_row_stride`` at build time; build_index auto-widens).
     row_stride: int
+    # approximate tier: {table_id: core.sketch.TableSketch} built from the
+    # same posting arrays (see core/sketch.py for the determinism contract)
+    sketches: dict = field(default_factory=dict, compare=False)
+    sketch_config: SketchConfig = field(default_factory=SketchConfig,
+                                        compare=False)
 
     @property
     def n_postings(self) -> int:
@@ -264,7 +270,8 @@ def numeric_view(parts: dict, row_stride: int):
 
 def build_index(lake: DataLake, bucket_bits: int = 12, seed: int = 0,
                 with_quadrants: bool = True,
-                row_stride: int | None = None) -> UnifiedIndex:
+                row_stride: int | None = None,
+                sketch_config: SketchConfig | None = None) -> UnifiedIndex:
     max_cols = 1
     table_rows = np.zeros(max(lake.n_tables, 1), np.int32)
     per_table = []
@@ -290,6 +297,7 @@ def build_index(lake: DataLake, bucket_bits: int = 12, seed: int = 0,
     quadrant = parts["quadrant"]
     rank_conv, rank_rand = parts["rank_conv"], parts["rank_rand"]
 
+    sketch_config = sketch_config or SketchConfig()
     return UnifiedIndex(
         cell_hash=cell_hash, table_id=table_id, col_id=col_id, row_id=row_id,
         superkey_lo=superkey_lo, superkey_hi=superkey_hi, quadrant=quadrant,
@@ -297,4 +305,6 @@ def build_index(lake: DataLake, bucket_bits: int = 12, seed: int = 0,
         num_perm=num_perm, num_rowkey=num_rowkey,
         n_tables=lake.n_tables, max_cols=max_cols, bucket_bits=bucket_bits,
         bucket_offsets=bucket_offsets, table_rows=table_rows,
-        row_stride=row_stride)
+        row_stride=row_stride,
+        sketches=sketch_tables(parts, seed=seed, config=sketch_config),
+        sketch_config=sketch_config)

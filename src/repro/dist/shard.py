@@ -181,6 +181,10 @@ class ShardedStore:
         # cost_model only truth-tests this attribute (store duck type)
         return self.shards[0].quadrant
 
+    @property
+    def sketch_config(self):
+        return self.shards[0].sketch_config
+
     def live_ids(self) -> list:
         return sorted(t for s in self.shards for t in s.live_ids())
 
@@ -371,6 +375,14 @@ class ShardedExecutor(Executor):
         raise NotImplementedError(
             "single-seeker dispatch is not defined on a sharded lake; "
             "run a plan (fused path) instead")
+
+    def _sketch_sources(self):
+        # one pack per shard, committed to the shard's device like its
+        # MatchEngine; table-axis partitioning makes the probe shard-local
+        # (a shard's pack is all-zero outside its own tables) so the
+        # cross-shard merge in sketch_probe is an exact elementwise sum
+        return [(shard.sketch_map(), None, dev)
+                for shard, dev in zip(self.index.shards, self.devices)]
 
 
 # --------------------------------------------------------------------------

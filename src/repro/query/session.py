@@ -22,6 +22,7 @@ from repro.core.executor import ExecInfo, Executor
 from repro.core.index import build_index
 from repro.core.optimizer import optimize as optimize_plan
 from repro.core.plan import Plan
+from repro.core.sketch import ApproxParams
 from repro.query import logical as L
 from repro.query.lower import lower
 from repro.query.parse import parse
@@ -47,6 +48,9 @@ class QueryResult:
     _ids: list | None = None
     cache: object | None = None       # serve.cache.CacheInfo (None: cache off)
     _entry: object | None = None      # backing CachedResult on cache hits
+    #: core.sketch.ApproxInfo when the query ran with ``approx=`` (estimates,
+    #: intervals, escalation accounting); None on the exact path
+    approx: object | None = None
 
     @property
     def scores(self):
@@ -311,7 +315,8 @@ class Session:
 
     # ---------------------------------------------------------------- execute
     def query(self, q, top: int | None = None, optimize: bool = True,
-              sync: bool = True, fused: bool = False) -> QueryResult:
+              sync: bool = True, fused: bool = False,
+              approx=False) -> QueryResult:
         """Compile + execute; ``top`` overrides/sets the root result limit.
 
         With the query cache enabled (``connect(lake, cache=True)``) the
@@ -323,8 +328,22 @@ class Session:
 
         ``fused=True`` executes on the fused path (core/fused.py): batched
         same-kind seeker dispatch + a single whole-DAG device program,
-        ``ExecInfo.launches <= n_kinds + 1`` — bit-identical results."""
+        ``ExecInfo.launches <= n_kinds + 1`` — bit-identical results.
+
+        ``approx=True`` (or ``{"epsilon": .., "confidence": ..}`` /
+        an ``ApproxParams``) answers from the sketch tier (core/sketch.py):
+        per-table estimates with confidence intervals replace the exact
+        probe, and only the contended boundary of the top-k ranking — tables
+        whose interval both reaches the k-th-place threshold and is wider
+        than ``epsilon`` — escalates to the exact path.  At ``epsilon=0``
+        the returned ids are identical to the exact query's.  The result's
+        ``approx`` field carries the estimates, intervals and escalation
+        accounting."""
         compiled = q if isinstance(q, Compiled) else self.compile(q, top=top)
+        params = ApproxParams.of(approx)
+        if params is not None:
+            return self._query_approx(compiled, params, optimize=optimize,
+                                      sync=sync, fused=fused)
         cache = self.cache
         t0 = time.perf_counter()
         if cache is None:
@@ -376,6 +395,120 @@ class Session:
                                    seekers_run=info.seeker_runs)
         return QueryResult(result=rs, info=info, compiled=compiled,
                            seconds=seconds, cache=cinfo)
+
+    # ----------------------------------------------------------------- approx
+    def _query_approx(self, compiled, params, *, optimize, sync,
+                      fused) -> QueryResult:
+        """Sketch-tier execution (``query(approx=...)``).
+
+        Single-seeker SC/KW/C plans answer from the per-table sketch
+        estimates; the escalation set (core/sketch.py) is the contended
+        boundary of the ranking — when it is non-empty the exact plan runs
+        (through the normal cached path, so the work is shared with exact
+        queries) and its ResultSet is returned wholesale, which makes the
+        ``epsilon=0`` identity guarantee trivial on that branch.  Multi-node
+        plans and MC seekers have no sketch estimator and fall back to exact
+        with ``approx.fallback`` set.  Approx results are cached under their
+        own key (plan fingerprint + epsilon/confidence + kind), never
+        cross-served with exact entries."""
+        from repro import obs
+        from repro.core import sketch as sk
+        from repro.obs import trace as otrace
+
+        t0 = time.perf_counter()
+        plan = compiled.plan
+        out_node = plan.nodes[plan.output]
+        cache = self.cache
+        rkey = None
+        if cache is not None:
+            cache.begin(self.executor.index, self._cache_config())
+            rkey = cache.result_key(plan, optimize, approx=params.key())
+            entry = cache.get_result(rkey)
+            if entry is not None:
+                res = self._hit_result(entry, compiled, sync,
+                                       time.perf_counter() - t0)
+                res.approx = getattr(entry, "approx", None)
+                return res
+        reg = obs.registry() if obs.enabled() else None
+        if reg is not None:
+            reg.counter("approx.queries").inc()
+        fallback = None
+        if not (len(plan.nodes) == 1 and out_node.is_seeker):
+            fallback = "multi-node-plan"
+        elif out_node.spec.kind == "MC":
+            fallback = "mc-no-estimator"
+        if fallback is not None:
+            if reg is not None:
+                reg.counter("approx.fallbacks").inc()
+            ainfo = sk.ApproxInfo(
+                params=params,
+                kind=out_node.spec.kind if out_node.is_seeker else "plan",
+                estimator="exact-fallback", escalated=0, candidates=0,
+                threshold=0.0, fallback=fallback)
+            return self._exact_for_approx(compiled, ainfo, rkey,
+                                          optimize, sync, fused, t0)
+        spec = out_node.spec
+        with otrace.current().span("approx.query", kind=spec.kind):
+            probe = self.executor.sketch_probe(spec, params.confidence)
+            esc, candidates, thresh = sk.escalation_set(probe, spec.k, params)
+        ainfo = sk.ApproxInfo(
+            params=params, kind=spec.kind, estimator=probe.estimator,
+            escalated=len(esc), candidates=candidates, threshold=thresh,
+            est=probe.est, ci_lo=probe.ci_lo, ci_hi=probe.ci_hi,
+            escalated_ids=[int(t) for t in esc],
+            probe_seconds=probe.seconds)
+        if reg is not None:
+            reg.counter("approx.candidates").inc(candidates)
+            reg.counter("approx.escalated_tables").inc(len(esc))
+        if len(esc):
+            if reg is not None:
+                reg.counter("approx.escalations").inc()
+            return self._exact_for_approx(compiled, ainfo, rkey,
+                                          optimize, sync, fused, t0)
+        import jax.numpy as jnp
+
+        from repro.core import combiners as comb
+        rs = comb.topk_result(jnp.asarray(probe.est, jnp.float32), spec.k)
+        if sync:
+            rs.scores.block_until_ready()
+        # the probe is host-side (0 launches); the top-k select is 1 program
+        info = ExecInfo(optimized=optimize, launches=probe.launches + 1)
+        info.node_seconds[plan.output] = probe.seconds
+        info.order.append(plan.output)
+        seconds = time.perf_counter() - t0
+        if cache is None:
+            return QueryResult(result=rs, info=info, compiled=compiled,
+                               seconds=seconds, approx=ainfo)
+        from repro.serve.cache import CachedResult
+        cache.put_result(rkey, CachedResult(result=rs, info=info,
+                                            plan_nodes=len(plan.nodes),
+                                            approx=ainfo),
+                         n_tables=self.executor.n_tables)
+        cache.note("miss")
+        return QueryResult(result=rs, info=info, compiled=compiled,
+                           seconds=seconds,
+                           cache=cache.request_info("miss"), approx=ainfo)
+
+    def _exact_for_approx(self, compiled, ainfo, rkey, optimize, sync,
+                          fused, t0) -> QueryResult:
+        """Resolve an approx request on the exact path (escalation or
+        fallback): the exact run goes through ``query`` so it lands in — and
+        can be served from — the plain exact-result cache, then the same
+        ResultSet is also recorded under the approx key with its ApproxInfo
+        so repeat approx requests hit directly."""
+        eres = self.query(compiled, optimize=optimize, sync=sync, fused=fused)
+        if self.cache is not None and rkey is not None:
+            from repro.serve.cache import CachedResult
+            self.cache.put_result(
+                rkey, CachedResult(result=eres.result, info=eres.info,
+                                   plan_nodes=len(compiled.plan.nodes),
+                                   ids=eres._ids, approx=ainfo),
+                n_tables=self.executor.n_tables)
+        return QueryResult(result=eres.result, info=eres.info,
+                           compiled=compiled,
+                           seconds=time.perf_counter() - t0, _ids=eres._ids,
+                           cache=eres.cache, _entry=eres._entry,
+                           approx=ainfo)
 
     def sql(self, text: str, optimize: bool = True,
             sync: bool = True) -> QueryResult:

@@ -69,6 +69,7 @@ class CachedResult:
     info: object                  # ExecInfo of the producing run
     plan_nodes: int
     ids: list | None = None       # ranked table ids, materialized on first hit
+    approx: object | None = None  # core.sketch.ApproxInfo for approx entries
 
 
 @dataclass
@@ -170,10 +171,14 @@ class QueryCache:
 
     # ---------------------------------------------------------- result level
     @staticmethod
-    def result_key(plan, optimize: bool) -> tuple:
+    def result_key(plan, optimize: bool, approx=None) -> tuple:
         """Canonical result identity: plan fingerprint + optimizer mode (the
-        B-NO baseline may rank differently, so it gets its own entries)."""
-        return (fingerprint_plan(plan), bool(optimize))
+        B-NO baseline may rank differently, so it gets its own entries).
+        ``approx`` is the ``ApproxParams.key()`` tuple for sketch-tier
+        requests — different (epsilon, confidence) settings are different
+        computations and must never cross-serve with each other or with
+        exact entries (``approx=None``)."""
+        return (fingerprint_plan(plan), bool(optimize), approx)
 
     def get_result(self, key) -> CachedResult | None:
         return self.results.get(key)

@@ -73,6 +73,11 @@ class DiscoveryResponse:
     # per-kind probes, per-shard probes, cross-shard merge, drain, host
     # transfer.  None unless the server is tracing.
     trace: object = None
+    # sketch-tier report for ``serve(query, approx=...)`` requests
+    # (core/sketch.py ApproxInfo.as_dict): epsilon/confidence, estimator,
+    # escalation accounting, and per-hit (estimate, ci_lo, ci_hi) intervals
+    # under ``"estimates"``.  None on the exact path.
+    approx: dict | None = None
 
     @property
     def total_node_seconds(self) -> float:
@@ -165,11 +170,18 @@ class DiscoveryEngine:
                                  applied_rules=list(res.applied_rules),
                                  cache=res.cache.as_dict()
                                  if res.cache is not None else None,
-                                 scores=scores_np)
+                                 scores=scores_np,
+                                 approx=res.approx.as_dict(ids=res.ids)
+                                 if res.approx is not None else None)
 
-    def serve(self, query, optimize: bool = True,
-              fused: bool = False) -> DiscoveryResponse:
-        res = self.session.query(query, optimize=optimize, fused=fused)
+    def serve(self, query, optimize: bool = True, fused: bool = False,
+              approx=False) -> DiscoveryResponse:
+        """One request.  ``approx=`` forwards to ``Session.query`` — the
+        response then answers from the sketch tier (estimates + intervals in
+        ``DiscoveryResponse.approx``) with only the contended top-k boundary
+        escalated to the exact path."""
+        res = self.session.query(query, optimize=optimize, fused=fused,
+                                 approx=approx)
         return self._response(res, res.seconds)
 
     @staticmethod

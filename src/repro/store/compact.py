@@ -48,7 +48,9 @@ def merge_segments(store: SegmentStore, segs: list,
     if not len(parts["cell_hash"]):
         return None
     return segment_from_arrays(parts, bucket_bits=store.bucket_bits,
-                               row_stride=store.row_stride, pad_min=pad_min)
+                               row_stride=store.row_stride, pad_min=pad_min,
+                               seed=store.seed,
+                               sketch_config=store.sketch_config)
 
 
 def _tier(seg: Segment) -> int:
@@ -117,6 +119,9 @@ def compact_store(store: SegmentStore, policy: CompactionPolicy | None = None,
             bucket_bits=seg.bucket_bits, bucket_offsets=seg.bucket_offsets,
             n_real=seg.n_real, n_num=seg.n_num,
             tables=tuple(sorted(remap[t] for t in seg.tables)),
+            # sketches are id-free summaries: remapping is a pure re-keying
+            sketches={remap[t]: sk for t, sk in seg.sketches.items()
+                      if t in remap},
         ).with_row_stride(store.row_stride)
     names = [store.table_names[old] for old in live]
     rows = np.zeros_like(store.table_rows)

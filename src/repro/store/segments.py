@@ -29,6 +29,7 @@ from repro.core.index import (POSTING_KEYS, UnifiedIndex, _ceil_pow2,
                               bucket_offsets_for, concat_postings,
                               numeric_view, sort_postings, table_postings,
                               validate_row_stride)
+from repro.core.sketch import SketchConfig, sketch_tables
 
 SEG_PAD_MIN = 256          # smallest padded segment length (postings)
 PAD_RANK = np.int32(2 ** 31 - 1)   # pad rank: never < any h_sample
@@ -68,6 +69,10 @@ class Segment:
     n_real: int
     n_num: int
     tables: tuple                # global table ids wholly contained here
+    #: approximate tier: {global_table_id: core.sketch.TableSketch}, a pure
+    #: function of the live posting arrays + store seed + SketchConfig — so
+    #: deltas, merges, snapshot reloads and rebuilds carry identical sketches
+    sketches: dict = field(default_factory=dict, repr=False, compare=False)
     #: memoized device uploads, keyed by target device (None = jax default) —
     #: a sharded lake pins each shard's segments to its own mesh device
     _dev: dict = field(default_factory=dict, repr=False, compare=False)
@@ -183,7 +188,8 @@ class Segment:
             rank_rand=self.rank_rand, num_perm=self.num_perm,
             num_rowkey=num_rowkey, bucket_bits=self.bucket_bits,
             bucket_offsets=self.bucket_offsets, n_real=self.n_real,
-            n_num=self.n_num, tables=self.tables)
+            n_num=self.n_num, tables=self.tables,
+            sketches=self.sketches)    # stride doesn't touch cell content
         if self._dev:
             # only num_rowkey changed: carry the memoized uploads over so
             # widening never re-transfers the posting arrays
@@ -198,9 +204,17 @@ class Segment:
 
 
 def segment_from_arrays(parts: dict, *, bucket_bits: int, row_stride: int,
-                        pad_min: int = SEG_PAD_MIN) -> Segment:
-    """Sort + pad concatenated posting arrays into a Segment."""
+                        pad_min: int = SEG_PAD_MIN, seed: int = 0,
+                        sketch_config: SketchConfig | None = None) -> Segment:
+    """Sort + pad concatenated posting arrays into a Segment.
+
+    Every segment-construction path (fresh build, L0 delta, compaction
+    merge, snapshot reload) funnels through here, so the per-table sketches
+    are computed in exactly one place — from the same posting arrays — and
+    stay bit-identical across all of them."""
     parts = sort_postings(parts)
+    sketches = sketch_tables(parts, seed=seed,
+                             config=sketch_config or SketchConfig())
     n = len(parts["cell_hash"])
     bucket_offsets = bucket_offsets_for(parts["cell_hash"], bucket_bits)
     num_perm, num_rowkey = numeric_view(parts, row_stride)
@@ -221,12 +235,13 @@ def segment_from_arrays(parts: dict, *, bucket_bits: int, row_stride: int,
         num_perm=_pad_to(num_perm, nnp, 0),
         num_rowkey=_pad_to(num_rowkey, nnp, np.int32(2 ** 31 - 1)),
         bucket_bits=bucket_bits, bucket_offsets=bucket_offsets,
-        n_real=n, n_num=n_num, tables=tables)
+        n_real=n, n_num=n_num, tables=tables, sketches=sketches)
 
 
 def build_segment(entries, *, bucket_bits: int, row_stride: int,
                   seed: int = 0, with_quadrants: bool = True,
-                  pad_min: int = SEG_PAD_MIN) -> Segment:
+                  pad_min: int = SEG_PAD_MIN,
+                  sketch_config: SketchConfig | None = None) -> Segment:
     """Build one segment from ``entries`` = [(global_table_id, Table), ...].
 
     Uses the same per-table posting builder as ``build_index``
@@ -236,7 +251,8 @@ def build_segment(entries, *, bucket_bits: int, row_stride: int,
         table_postings(tab, tid, seed=seed, with_quadrants=with_quadrants)
         for tid, tab in entries])
     return segment_from_arrays(parts, bucket_bits=bucket_bits,
-                               row_stride=row_stride, pad_min=pad_min)
+                               row_stride=row_stride, pad_min=pad_min,
+                               seed=seed, sketch_config=sketch_config)
 
 
 class SegmentStore:
@@ -255,7 +271,8 @@ class SegmentStore:
                  with_quadrants: bool = True, entries=None,
                  table_names=None, table_cap: int | None = None,
                  row_stride: int | None = None,
-                 max_cols: int | None = None):
+                 max_cols: int | None = None,
+                 sketch_config: SketchConfig | None = None):
         """Default path: index every table of ``lake`` under global ids
         ``0..n-1``.  Shard path (dist/shard.py): ``entries`` is an explicit
         ``[(global_id, Table), ...]`` subset and ``table_cap`` /
@@ -265,6 +282,7 @@ class SegmentStore:
         self.bucket_bits = bucket_bits
         self.seed = seed
         self.with_quadrants = with_quadrants
+        self.sketch_config = sketch_config or SketchConfig()
         if entries is None:
             tables = list(lake.tables) if lake is not None else []
             entries = list(enumerate(tables))
@@ -299,7 +317,8 @@ class SegmentStore:
         self.segments: list[Segment] = [build_segment(
             entries, bucket_bits=bucket_bits,
             row_stride=self.row_stride, seed=seed,
-            with_quadrants=with_quadrants)]
+            with_quadrants=with_quadrants,
+            sketch_config=self.sketch_config)]
 
     # -------------------------------------------------------------- geometry
     @property
@@ -341,7 +360,8 @@ class SegmentStore:
             self.segments.append(build_segment(
                 [], bucket_bits=self.bucket_bits,
                 row_stride=self.row_stride, seed=self.seed,
-                with_quadrants=self.with_quadrants))
+                with_quadrants=self.with_quadrants,
+                sketch_config=self.sketch_config))
 
     # ------------------------------------------------------------ statistics
     def host_counts(self, q_hashes: np.ndarray,
@@ -461,7 +481,8 @@ class SegmentStore:
         self.segments.append(build_segment(
             [(tid, table)], bucket_bits=self.bucket_bits,
             row_stride=self.row_stride, seed=self.seed,
-            with_quadrants=self.with_quadrants))
+            with_quadrants=self.with_quadrants,
+            sketch_config=self.sketch_config))
         self.bump_epoch()
         return tid
 
@@ -505,6 +526,17 @@ class SegmentStore:
         self.bump_epoch()
 
     # ---------------------------------------------------------------- export
+    def sketch_map(self) -> dict:
+        """Live tables' sketches, unioned over segments.  A table's postings
+        live wholly inside one segment (module invariant), so the union has
+        no conflicts; tombstoned slots are dropped here."""
+        out: dict = {}
+        for seg in self.segments:
+            for t, sk in seg.sketches.items():
+                if self.alive[t]:
+                    out[t] = sk
+        return out
+
     def live_postings(self, segments=None) -> dict:
         """Concatenated live posting arrays (tombstones dropped, unsorted)
         of ``segments`` (default: all) — the one tombstone-GC collection

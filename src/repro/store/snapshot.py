@@ -20,6 +20,7 @@ from pathlib import Path
 import numpy as np
 
 from repro.core.index import POSTING_KEYS, _ceil_pow2
+from repro.core.sketch import SketchConfig
 from repro.store.segments import SegmentStore, segment_from_arrays
 
 SNAPSHOT_FORMAT = "blend-livelake-snapshot"
@@ -51,6 +52,7 @@ def save(store: SegmentStore, path) -> Path:
         "row_stride": store.row_stride,
         "seed": store.seed,
         "with_quadrants": store.with_quadrants,
+        "sketch": store.sketch_config.as_dict(),
         "max_cols": store._max_cols_real,
         "table_names": list(store.table_names),
         "lake_stats": {
@@ -86,6 +88,10 @@ def load(path) -> SegmentStore:
     store.bucket_bits = int(manifest["bucket_bits"])
     store.seed = int(manifest["seed"])
     store.with_quadrants = bool(manifest["with_quadrants"])
+    # additive manifest key: pre-sketch snapshots load under the default
+    # config (sketches are recomputed from the arrays, not persisted)
+    store.sketch_config = (SketchConfig.from_dict(manifest["sketch"])
+                           if "sketch" in manifest else SketchConfig())
     store.table_names = list(manifest["table_names"])
     store._max_cols_real = int(manifest["max_cols"])
     store.row_stride = int(manifest["row_stride"])
@@ -100,5 +106,6 @@ def load(path) -> SegmentStore:
     store.pending_dead = set()
     store.epoch = int(manifest["epoch"])
     store.segments = [segment_from_arrays(
-        parts, bucket_bits=store.bucket_bits, row_stride=store.row_stride)]
+        parts, bucket_bits=store.bucket_bits, row_stride=store.row_stride,
+        seed=store.seed, sketch_config=store.sketch_config)]
     return store

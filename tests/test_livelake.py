@@ -465,3 +465,91 @@ def test_host_counts_live_only_excludes_tombstones():
     assert (ll.store.host_counts(h) == full).all()          # slots still held
     live = ll.store.host_counts(h, live_only=True)
     assert live.sum() < full.sum()
+
+
+# --------------------------------------------------------------------------
+# sketch tier: mutation / compaction / snapshot parity (approx discovery)
+# --------------------------------------------------------------------------
+
+SKETCH_FIELDS = ("kmv", "kmv_m", "tbl_kmv", "minhash", "samp_rows",
+                 "samp_hash", "samp_quad")
+
+
+def _assert_sketches_equal(got, want, msg=""):
+    assert set(got) == set(want), msg
+    for t in got:
+        assert got[t].tbl_m == want[t].tbl_m, (msg, t)
+        for f in SKETCH_FIELDS:
+            np.testing.assert_array_equal(
+                getattr(got[t], f), getattr(want[t], f),
+                err_msg=f"{msg} table {t} field {f}")
+
+
+def test_sketch_tier_survives_mutations_bit_identically():
+    """Live-store sketches after add/drop/compact == a from-scratch build of
+    the surviving tables (sketches are content-addressed, so the comparison
+    is field-exact even though the rebuild assigns different table ids)."""
+    lake = small_live_lake(seed=61)
+    session = blend.connect(lake, live=True)
+    tbl = dict(enumerate(lake.tables))
+    for i in range(3):
+        t = extra_table(i)
+        tbl[session.add_table(t)] = t
+    session.drop_table(5)
+    del tbl[5]
+    live_ids = session.live.live_ids()
+    live_map = session.live.store.sketch_map()
+    assert set(live_map) == set(live_ids)
+    rebuilt = build_index(DataLake([tbl[t] for t in live_ids]))
+    for pos, tid in enumerate(live_ids):
+        for f in SKETCH_FIELDS:
+            np.testing.assert_array_equal(
+                getattr(live_map[tid], f), getattr(rebuilt.sketches[pos], f),
+                err_msg=f"tid {tid} field {f}")
+    before = dict(live_map)
+    session.compact()                # merge must re-derive identical sketches
+    _assert_sketches_equal(session.live.store.sketch_map(), before, "compact")
+
+
+def test_sketch_tier_snapshot_roundtrip(tmp_path):
+    lake = small_live_lake(seed=63)
+    session = blend.connect(lake, live=True)
+    session.add_table(extra_table(4))
+    session.drop_table(2)
+    before = dict(session.live.store.sketch_map())
+    session.snapshot(tmp_path / "sk")
+    restored = blend.restore(tmp_path / "sk")
+    assert (restored.live.store.sketch_config
+            == session.live.store.sketch_config)
+    _assert_sketches_equal(restored.live.store.sketch_map(), before,
+                           "restore")
+
+
+def test_approx_query_parity_through_mutations():
+    """approx(epsilon=0) ids stay identical to exact ids at every mutation
+    stage — the sketch packs must track the store epoch, not go stale."""
+    lake = small_live_lake(seed=65)
+    session = blend.connect(lake, live=True, cache=True)
+    t3 = lake.tables[3]
+    vals = list(t3.columns[0][:8])
+    specs = [Seekers.SC(vals, k=10), Seekers.KW(vals, k=10),
+             Seekers.Correlation(vals, [float(i) for i in range(8)], k=10,
+                                 h=64)]
+
+    def check(stage):
+        for spec in specs:
+            p = Plan()
+            p.add("out", spec)
+            exact = session.query(p)
+            approx = session.query(p, approx={"epsilon": 0.0})
+            assert approx.ids == exact.ids, (stage, spec.kind)
+            assert approx.approx is not None, (stage, spec.kind)
+
+    check("initial")
+    tid = session.add_table(extra_table(6))
+    check("after add")
+    session.drop_table(tid)
+    session.drop_table(5)
+    check("after drop")
+    session.compact()
+    check("after compact")

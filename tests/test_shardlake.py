@@ -219,3 +219,41 @@ def test_shard_cache_hits_after_mutation_settles(lake):
     session.add_table(_extra(0, t))
     assert session.query(q).cache.status == "miss"   # epoch tuple moved
     assert session.query(q).cache.status == "hit"
+
+
+# --------------------------------------------------------------------------
+# sketch tier: 1-vs-N-shard approx parity
+# --------------------------------------------------------------------------
+
+def test_shard_sketch_probe_bit_identical(lake):
+    """Per-shard sketch probes merged by elementwise sum == the 1-shard
+    probe, bit-for-bit (every table's slots are nonzero on exactly one
+    shard), on static and mutated-live stores."""
+    specs = {k: v for k, v in seekers_for(lake).items() if k != "mc"}
+    for live in (False, True):
+        ex1, ex3 = executors(lake, 3, "sorted", live)
+        for name, spec in specs.items():
+            p1 = ex1.sketch_probe(spec)
+            p3 = ex3.sketch_probe(spec)
+            for f in ("est", "bound_lo", "bound_hi", "ci_lo", "ci_hi"):
+                np.testing.assert_array_equal(
+                    getattr(p1, f), getattr(p3, f),
+                    err_msg=f"{name} live={live} field {f}")
+
+
+def test_shard_approx_query_parity(lake):
+    """Session-level approx answers are shard-count-invariant, and
+    epsilon=0 stays id-identical to the exact path on a sharded lake."""
+    t = lake.tables[2]
+    ses1 = blend.connect(lake, shards=1)
+    ses3 = blend.connect(lake, shards=3)
+    for q in (blend.sc(list(t.columns[0][:6]), k=8),
+              blend.kw([t.columns[1][0], t.columns[1][1]], k=8)):
+        exact = ses3.query(q)
+        for params in ({"epsilon": 0.0}, True):
+            a1 = ses1.query(q, approx=params)
+            a3 = ses3.query(q, approx=params)
+            assert a1.ids == a3.ids
+            np.testing.assert_array_equal(np.asarray(a1.scores),
+                                          np.asarray(a3.scores))
+        assert ses3.query(q, approx={"epsilon": 0.0}).ids == exact.ids
