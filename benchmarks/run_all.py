@@ -33,6 +33,12 @@ coverage.  ``BENCH_9.json`` records the approximate-discovery workloads
 recall@10 per seeker kind at 1k/10k (CI smoke) or 1k/10k/100k columns
 (``--full``), plus the escalation-rate/recall curve vs epsilon
 (acceptance: >= 3x p50 at <= 5% recall loss on the largest scale).
+``BENCH_10.json`` records the durability workloads (benchmarks/
+fault_bench.py, its own process): WAL-on vs WAL-off mutation throughput
+(acceptance: best durable mode within ~15%), crash-recovery time vs WAL
+length with bit-identity checks, the injected-fault serving sweep (zero
+wrong results, degraded flagged, deadlines enforced), and trace replay
+with client retries.
 
     PYTHONPATH=src python benchmarks/run_all.py [--out PATH] [--full]
 
@@ -459,6 +465,20 @@ def main(out_path: Path, full: bool = False, iters: int = 10) -> dict:
     else:
         print(f"sketch bench failed (exit {r.returncode}); "
               f"skipping {sketch_path}")
+
+    # durability and fault tolerance: own process — the WAL overhead
+    # measurement times fsync-bound mutation acks and wants a quiet heap
+    fault_path = out_path.parent / "BENCH_10.json"
+    r = subprocess.run(
+        [sys.executable, str(REPO_ROOT / "benchmarks/fault_bench.py"),
+         "--out", str(fault_path),
+         "--mutations", "40" if full else "24"],
+        check=False)
+    if r.returncode == 0:
+        print(f"wrote {fault_path}")
+    else:
+        print(f"fault bench failed (exit {r.returncode}); "
+              f"skipping {fault_path}")
 
     for name, s in {**workloads, **live, **cache, **fused}.items():
         extra = "".join(

@@ -7,11 +7,11 @@ for the IR-to-paper mapping.
 from repro.query import (And, BlendQLError, Compiled, Counter, DEFAULT_RULES,
                          Expr, Explain, Or, QueryResult, Seek, Session, Sub,
                          connect, corr, counter, fingerprint_query, kw, lower,
-                         mc, parse, restore, rewrite, sc)
+                         mc, parse, recover, restore, rewrite, sc)
 
 __all__ = [
     "And", "BlendQLError", "Compiled", "Counter", "DEFAULT_RULES", "Expr",
     "Explain", "Or", "QueryResult", "Seek", "Session", "Sub", "connect",
     "corr", "counter", "fingerprint_query", "kw", "lower", "mc", "parse",
-    "restore", "rewrite", "sc",
+    "recover", "restore", "rewrite", "sc",
 ]

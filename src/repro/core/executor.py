@@ -76,6 +76,11 @@ class ExecInfo:
     # program — ``n_groups + 1``, which is ``n_kinds + 1`` unless same-kind
     # seekers differ in static shape args (MC n_cols, C h/sampling)
     launches: int = 0
+    # sharded graceful degradation: indices of shards whose fused probe
+    # failed twice (initial + one retry on a rebuilt engine) and were
+    # zero-substituted out of the merge — the response is flagged degraded
+    # (serve/engine.py DiscoveryResponse) instead of erroring the batch
+    failed_shards: list = field(default_factory=list)
 
     @property
     def total_seconds(self) -> float:

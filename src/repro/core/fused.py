@@ -54,7 +54,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import obs
+from repro import faults, obs
 from repro.core import seekers as seek
 from repro.core.combiners import ResultSet
 from repro.obs import trace as otrace
@@ -278,7 +278,7 @@ def _pow2(n: int, lo: int) -> int:
     return _pow2_at_least(max(n, 1), lo=lo, hi=1 << 30)
 
 
-def _launch_group(ex, key, tasks):
+def _launch_group(ex, key, tasks, failed=None):
     """Dispatch one seeker group as a single device program.  Returns
     (scores [n_seekers_p, n_tables], overflow [n_seekers_p]) — both lazy.
     ``tasks`` are the deduped head tasks of the group (run_fused collapses
@@ -289,7 +289,14 @@ def _launch_group(ex, key, tasks):
     return *tuples* of per-shard (scores, overflow).  Each shard holds
     whole tables, so summing the per-shard matrices (inside ``_run_dag``)
     is exact: every table slot is nonzero on exactly one shard.  The whole
-    per-shard fan-out is ONE logical launch (ExecInfo.launches)."""
+    per-shard fan-out is ONE logical launch (ExecInfo.launches).
+
+    Graceful degradation: a shard probe that raises is retried once on a
+    freshly rebuilt shard engine (``ex.reset_shard``); a second failure
+    drops the shard from this launch — its (scores, overflow) are
+    zero-substituted, which the exact merge treats as "no tables here" —
+    and its index lands in ``failed`` so the response is flagged degraded
+    rather than silently partial."""
     for i, t in enumerate(tasks):
         t.row = i
     kind = key[0]
@@ -399,9 +406,30 @@ def _launch_group(ex, key, tasks):
         m_cap = fill_caps(caps, s)
         with rec.span(f"shard:{s}", m_cap=m_cap, seekers=len(tasks)):
             t0 = time.perf_counter()
-            sc, ov = dispatch(eng, caps, m_cap)
-            if sync_time:
-                jax.block_until_ready(sc)
+            try:
+                faults.checkpoint(f"shard.probe.{s}")
+                sc, ov = dispatch(eng, caps, m_cap)
+                if sync_time:
+                    jax.block_until_ready(sc)
+            except Exception:                        # noqa: BLE001
+                # InjectedCrash (BaseException) deliberately passes through:
+                # a simulated kill -9 must not be absorbed as a shard retry
+                mreg.counter("shard.failures").inc()
+                try:
+                    eng = ex.reset_shard(s)
+                    faults.checkpoint(f"shard.probe.{s}")
+                    sc, ov = dispatch(eng, caps, m_cap)
+                    if sync_time:
+                        jax.block_until_ready(sc)
+                    mreg.counter("shard.retries").inc()
+                except Exception:                    # noqa: BLE001
+                    # rebuilt engine failed too: drop the shard from the
+                    # merge — zeros are exactly "no tables live here"
+                    mreg.counter("shard.dropped").inc()
+                    if failed is not None:
+                        failed.add(s)
+                    sc = jnp.zeros((nsp, ex.n_tables), jnp.float32)
+                    ov = jnp.zeros(nsp, jnp.int32)
             dt = time.perf_counter() - t0
         shard_s.append(dt)
         mreg.histogram(f"shard.probe_seconds.{s}").observe(dt)
@@ -544,6 +572,7 @@ def run_fused(ex, plans, optimize=True, cost_model=None, cache=None):
         groups.setdefault(h.group_key, []).append(h)
     group_out: dict[tuple, tuple] = {}
     launch_seconds: dict[tuple, float] = {}
+    failed_shards: set = set()
     rec = otrace.current()
     mreg = obs.registry()
     for key in sorted(groups):
@@ -554,7 +583,8 @@ def run_fused(ex, plans, optimize=True, cost_model=None, cache=None):
         tr0 = sum(seek.TRACE_COUNTS.values())
         t0 = time.perf_counter()
         with rec.span("probe:" + kind_name, seekers=len(groups[key])) as sp:
-            group_out[key] = _launch_group(ex, key, groups[key])
+            group_out[key] = _launch_group(ex, key, groups[key],
+                                           failed=failed_shards)
         dt = time.perf_counter() - t0
         launch_seconds[key] = dt
         if sum(seek.TRACE_COUNTS.values()) > tr0:
@@ -603,6 +633,9 @@ def run_fused(ex, plans, optimize=True, cost_model=None, cache=None):
         info.order = pr.order
         info.cached_nodes = pr.cached_names
         info.seeker_runs = len(pr.tasks)
+        # every plan in the batch shares the group launches, so a dropped
+        # shard degrades every response formed from them
+        info.failed_shards = sorted(failed_shards)
         # one launch per seeker group + the DAG program; groups == kinds
         # unless same-kind seekers differ in static shape args (MC n_cols,
         # C h/sampling), each of which is its own device program

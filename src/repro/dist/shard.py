@@ -271,24 +271,37 @@ class ShardedStore:
                 if s.max_cols != before:
                     s.bump_epoch()
 
-    def add_table(self, table, name: str | None = None) -> int:
+    def add_table(self, table, name: str | None = None,
+                  tid: int | None = None, shard: int | None = None) -> int:
         """Route one new table to the least-loaded shard under a
         coordinator-allocated global id.  Only that shard re-indexes (one L0
         delta); global geometry changes — stride widening, capacity growth,
-        max-cols growth — are the exception and land on every shard."""
+        max-cols growth — are the exception and land on every shard.
+
+        ``tid`` / ``shard`` pin the global id and destination shard — WAL
+        replay (store/wal.py) uses both so a recovered lake reproduces the
+        uninterrupted run's placement (and therefore its per-shard epochs,
+        probe windows and future least-loaded routing) exactly."""
         name = table.name if name is None else name
         if table.n_rows > self.row_stride:
             for s in self.shards:
                 s._widen_stride(table.n_rows)
                 s.bump_epoch()
-        gid = self._alloc_gid()
+        if tid is None:
+            gid = self._alloc_gid()
+        else:
+            gid = int(tid)
+            for s in self.shards:
+                if gid in s.free_ids:
+                    s.free_ids.remove(gid)
         if gid >= self.n_tables:
             cap = self.n_tables
             while gid >= cap:
                 cap *= 2
             for s in self.shards:
                 s.grow_capacity(cap)      # bumps every shard's epoch
-        self.shards[self.least_loaded()].add_table(table, name, tid=gid)
+        dest = self.least_loaded() if shard is None else int(shard)
+        self.shards[dest].add_table(table, name, tid=gid)
         self._sync_max_cols()
         return gid
 
@@ -362,6 +375,16 @@ class ShardedExecutor(Executor):
         self._engine_epoch = store.epoch
         self.n_tables = store.n_tables
         self.max_cols = store.max_cols
+
+    def reset_shard(self, s: int):
+        """Throw away shard ``s``'s MatchEngine and rebuild it from the
+        store — the recovery lever for a failed shard probe (core/fused.py
+        retries exactly once on the rebuilt engine before dropping the
+        shard from the merge).  Returns the fresh engine."""
+        self.engines[s] = None
+        self._shard_epochs[s] = None
+        self._build_engine()
+        return self.engines[s]
 
     def run(self, plan, optimize: bool = True, cost_model=None,
             sync: bool = True, cache=None, fused: bool = True):

@@ -45,12 +45,12 @@ from repro.query.fingerprint import (fingerprint_expr, fingerprint_plan,
 from repro.query.parse import BlendQLError, parse
 from repro.query.rules import DEFAULT_RULES, rewrite
 from repro.query.session import (Compiled, Explain, QueryResult, Session,
-                                 connect, restore)
+                                 connect, recover, restore)
 
 __all__ = [
     "And", "BlendQLError", "Compiled", "Counter", "DEFAULT_RULES", "Expr",
     "Explain", "Or", "QueryResult", "Seek", "Session", "Sub", "connect",
     "corr", "counter", "fingerprint_expr", "fingerprint_plan",
     "fingerprint_query", "index_epoch_key", "kw", "lower", "mc", "parse",
-    "restore", "rewrite", "sc",
+    "recover", "restore", "rewrite", "sc",
 ]

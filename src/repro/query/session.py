@@ -243,6 +243,10 @@ class Session:
         """Index one new table without a rebuild; returns its table id."""
         return self._require_live().add_table(table, name=name)
 
+    def add_tables(self, tables, names=None) -> list:
+        """Bulk ingest: one WAL group commit covers the whole batch."""
+        return self._require_live().add_tables(tables, names=names)
+
     def drop_table(self, ref) -> int:
         """Drop a table (id or name): tombstoned, or whole-run removed."""
         return self._require_live().drop_table(ref)
@@ -632,7 +636,7 @@ def _make_cache(cache):
 
 
 def connect(lake, cost_model: CostModel | None = None, live: bool = False,
-            cache=False, shards: int | None = None,
+            cache=False, shards: int | None = None, wal=None,
             **executor_opts) -> Session:
     """Open a discovery session on a lake: builds the unified index and the
     executor (kwargs forwarded: ``backend=``, ``interpret=``, ``m_cap_max=``,
@@ -654,8 +658,14 @@ def connect(lake, cost_model: CostModel | None = None, live: bool = False,
     semantic query cache (serve/cache.py): repeated or subtree-sharing
     queries are served from compiled-plan, exact-result, and per-seeker
     caches, all invalidated by the store epoch so mutations never serve
-    stale ids."""
+    stale ids.
+
+    ``wal=`` (a path or ``store.wal.WriteAheadLog``; requires ``live=True``)
+    durably logs every acknowledged mutation so the lake survives crashes:
+    reopen with :func:`recover` to replay snapshot + WAL bit-identically."""
     qc = _make_cache(cache)
+    if wal is not None and not live:
+        raise ValueError("wal= requires live=True (the WAL logs mutations)")
     if shards:
         from repro.dist.shard import ShardedExecutor, ShardedStore
         from repro.store.live import LiveLake
@@ -664,12 +674,18 @@ def connect(lake, cost_model: CostModel | None = None, live: bool = False,
                             "shards=: the store must be built sharded")
         store = ShardedStore(lake, n_shards=shards)
         executor = ShardedExecutor(store, **executor_opts)
-        ll = LiveLake(lake, store=store) if live else None
+        ll = LiveLake(lake, store=store, wal=wal) if live else None
         return Session(executor, lake=lake, cost_model=cost_model,
                        live=ll, cache=qc)
     if live:
         from repro.store.live import LiveLake
-        ll = lake if isinstance(lake, LiveLake) else LiveLake(lake)
+        if isinstance(lake, LiveLake):
+            ll = lake
+            if wal is not None:
+                raise ValueError("pass wal= when the LiveLake is built, "
+                                 "not when wrapping an existing one")
+        else:
+            ll = LiveLake(lake, wal=wal)
         executor = Executor(ll.store, **executor_opts)
         return Session(executor, lake=None if lake is ll else lake,
                        cost_model=cost_model, live=ll, cache=qc)
@@ -684,5 +700,28 @@ def restore(path, cost_model: CostModel | None = None, cache=False,
     from repro.store.live import LiveLake
     ll = LiveLake.restore(path)
     executor = Executor(ll.store, **executor_opts)
+    return Session(executor, cost_model=cost_model, live=ll,
+                   cache=_make_cache(cache))
+
+
+def recover(path=None, *, wal=None, shards: int | None = None,
+            cost_model: CostModel | None = None, cache=False,
+            policy=None, **executor_opts) -> Session:
+    """Open a live session from durable state: the latest good snapshot
+    generation at ``path`` (if any; corrupt generations fall back — see
+    store/snapshot.py) plus a replay of every WAL record past the snapshot's
+    watermark (store/wal.py) — the crash-recovery path.  The recovered
+    session answers queries with ids, scores and epoch bit-identical to the
+    uninterrupted run, and keeps logging to ``wal``.
+
+    ``shards=N`` only matters on a cold start with no snapshot (a recovered
+    snapshot already knows its shard layout)."""
+    from repro.store.live import LiveLake
+    ll = LiveLake.recover(path, wal=wal, shards=shards, policy=policy)
+    if hasattr(ll.store, "shards"):
+        from repro.dist.shard import ShardedExecutor
+        executor = ShardedExecutor(ll.store, **executor_opts)
+    else:
+        executor = Executor(ll.store, **executor_opts)
     return Session(executor, cost_model=cost_model, live=ll,
                    cache=_make_cache(cache))

@@ -14,7 +14,10 @@ threads or sleeps (tests/test_batching.py drives them with a fake clock):
   coalescing window, and FIFO **mutation barriers**.  ``submit`` admits or
   sheds (``queue_full``); ``poll(now)`` returns either a :class:`Batch` of
   coalesced queries, a :class:`Barrier` mutation, or ``None`` (plus
-  ``next_deadline`` for the dispatcher's timed wait).
+  ``next_deadline`` for the dispatcher's timed wait).  Requests may carry an
+  absolute **deadline**: once it passes while queued they are culled into
+  ``Batch.expired`` — never dispatched — and the server resolves them with
+  a typed ``DeadlineExceeded`` instead of serving stale work.
 
 Barrier semantics — the property the serving tier's bit-identity rests on:
 every admitted operation carries a monotone sequence number; a query may
@@ -131,20 +134,28 @@ class RateLimiter:
 @dataclass
 class Pending:
     """One admitted operation waiting in the former.  ``payload`` is opaque
-    to the batching layer (the server stores the query/mutation + future)."""
+    to the batching layer (the server stores the query/mutation + future).
+    ``deadline_s`` is the absolute clock value past which the request must
+    not be dispatched — the former culls it into ``Batch.expired`` instead
+    of serving stale work."""
     seq: int
     kind: str                     # 'query' | 'mutation'
     lane: str
     tenant: str
     payload: object
     enqueue_s: float
+    deadline_s: float | None = None
 
 
 @dataclass
 class Batch:
-    """A coalesced set of queries, ready for one fused ``serve_many``."""
+    """A coalesced set of queries, ready for one fused ``serve_many``.
+    ``expired`` carries requests whose deadline passed while queued — never
+    dispatched; the server resolves them with ``DeadlineExceeded``.  A batch
+    may be *all* expired (``requests == []``)."""
     requests: list                # of Pending, lane-priority order
     formed_s: float
+    expired: list = field(default_factory=list)
 
 
 @dataclass
@@ -162,6 +173,7 @@ class FormerStats:
     batched_requests: int = 0
     batch_size_hist: dict = field(default_factory=dict)   # size -> count
     barriers: int = 0
+    expired: int = 0              # deadline-culled, never dispatched
 
     def note_shed(self, lane: str, reason: str):
         self.shed[reason] = self.shed.get(reason, 0) + 1
@@ -190,10 +202,13 @@ class BatchFormer:
 
     # ------------------------------------------------------------ admission
     def submit(self, payload, *, lane: str = BATCH, tenant: str = "default",
-               kind: str = "query", now: float = 0.0):
+               kind: str = "query", now: float = 0.0,
+               deadline_s: float | None = None):
         """Admit one operation.  Returns ``(Pending, None)`` on admit or
         ``(None, reason)`` on shed (bounded queues are the backpressure:
-        beyond ``max_queue`` the request is rejected, never buffered)."""
+        beyond ``max_queue`` the request is rejected, never buffered).
+        ``deadline_s`` (absolute; queries only) marks the request for
+        deadline culling — see :class:`Batch`."""
         if kind == "mutation":
             if len(self._mutations) >= self.mutation_max_queue:
                 self.stats.note_shed(self.MUTATION_LANE, SHED_QUEUE_FULL)
@@ -210,7 +225,8 @@ class BatchFormer:
         if len(self._queues[lane]) >= self.lanes[lane].max_queue:
             self.stats.note_shed(lane, SHED_QUEUE_FULL)
             return None, SHED_QUEUE_FULL
-        p = Pending(self._next_seq(), kind, lane, tenant, payload, now)
+        p = Pending(self._next_seq(), kind, lane, tenant, payload, now,
+                    deadline_s)
         self._queues[lane].append(p)
         self.stats.admitted[lane] = self.stats.admitted.get(lane, 0) + 1
         return p, None
@@ -244,10 +260,15 @@ class BatchFormer:
 
     def next_deadline(self, now: float) -> float | None:
         """When the dispatcher should wake if nothing arrives: the earliest
-        window close among runnable queries (``None``: nothing pending, so
-        wait for a submit).  With a mutation pending the deadline is ``now``
-        — runnable queries flush immediately so the barrier drains, and a
-        runnable mutation executes without waiting."""
+        window close — or request deadline — among runnable queries
+        (``None``: nothing pending, so wait for a submit).  With a mutation
+        pending the deadline is ``now`` — runnable queries flush immediately
+        so the barrier drains, and a runnable mutation executes without
+        waiting.  Only lane *heads* are inspected (O(lanes), not O(depth));
+        a non-head request with a shorter deadline than its head is culled
+        when it reaches the head or joins a batch, which is exact whenever
+        per-lane deadlines are FIFO-ordered (the common case: one deadline
+        policy per lane)."""
         if self._mutations:
             return now
         # no mutation pending => every queued query is runnable, and each
@@ -257,6 +278,8 @@ class BatchFormer:
             q = self._queues[name]
             if q:
                 d = q[0].enqueue_s + cfg.window_s
+                if q[0].deadline_s is not None:
+                    d = min(d, q[0].deadline_s)
                 best = d if best is None else min(best, d)
         return best
 
@@ -271,6 +294,15 @@ class BatchFormer:
         # O(max_batch + lanes), independent of queue depth — with thousands
         # queued under overload, a full-queue rescan per poll was the
         # serving tier's throughput cap.
+        # deadline culling, part 1: expired lane heads never dispatch — pop
+        # them eagerly (any seq: an expired query can't affect any result,
+        # so it may leave the queue even from behind a barrier)
+        expired: list = []
+        for name in self.lanes:
+            q = self._queues[name]
+            while q and q[0].deadline_s is not None \
+                    and now >= q[0].deadline_s:
+                expired.append(q.popleft())
         bseq = self._barrier_seq()
         take: list = []
         closed = False
@@ -286,15 +318,29 @@ class BatchFormer:
         if take:
             full = len(take) >= self.max_batch
             flush = bool(self._mutations)
-            if not (full or flush or closed):
-                return None
-            for p in take:            # per-lane prefixes: popleft is exact
-                self._queues[p.lane].popleft()
-            self.stats.batches += 1
-            self.stats.batched_requests += len(take)
-            h = self.stats.batch_size_hist
-            h[len(take)] = h.get(len(take), 0) + 1
-            return Batch(requests=take, formed_s=now)
+            if full or flush or closed:
+                for p in take:        # per-lane prefixes: popleft is exact
+                    self._queues[p.lane].popleft()
+                # deadline culling, part 2: a mid-prefix request may have
+                # expired even though its lane head had not
+                kept: list = []
+                for p in take:
+                    (kept if p.deadline_s is None or now < p.deadline_s
+                     else expired).append(p)
+                if kept:
+                    self.stats.batches += 1
+                    self.stats.batched_requests += len(kept)
+                    h = self.stats.batch_size_hist
+                    h[len(kept)] = h.get(len(kept), 0) + 1
+                self.stats.expired += len(expired)
+                return Batch(requests=kept, formed_s=now, expired=expired)
+            if expired:
+                self.stats.expired += len(expired)
+                return Batch(requests=[], formed_s=now, expired=expired)
+            return None
+        if expired:
+            self.stats.expired += len(expired)
+            return Batch(requests=[], formed_s=now, expired=expired)
         if self._mutations:
             self.stats.barriers += 1
             return Barrier(request=self._mutations.popleft())

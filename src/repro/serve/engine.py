@@ -78,6 +78,13 @@ class DiscoveryResponse:
     # escalation accounting, and per-hit (estimate, ci_lo, ci_hi) intervals
     # under ``"estimates"``.  None on the exact path.
     approx: dict | None = None
+    # graceful degradation (dist/shard.py + core/fused.py): shards whose
+    # probe failed twice (initial + one retry on a rebuilt engine) are
+    # excluded from the merge instead of failing the request — their tables
+    # are simply absent from the ranking.  ``degraded=True`` flags the
+    # partial result; ``failed_shards`` names the shard indices dropped.
+    degraded: bool = False
+    failed_shards: list = field(default_factory=list)
 
     @property
     def total_node_seconds(self) -> float:
@@ -172,7 +179,11 @@ class DiscoveryEngine:
                                  if res.cache is not None else None,
                                  scores=scores_np,
                                  approx=res.approx.as_dict(ids=res.ids)
-                                 if res.approx is not None else None)
+                                 if res.approx is not None else None,
+                                 degraded=bool(getattr(res.info,
+                                                       "failed_shards", [])),
+                                 failed_shards=list(getattr(
+                                     res.info, "failed_shards", [])))
 
     def serve(self, query, optimize: bool = True, fused: bool = False,
               approx=False) -> DiscoveryResponse:

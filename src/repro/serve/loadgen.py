@@ -24,6 +24,8 @@ sleeps — run-to-run latency distributions match modulo machine noise.
 """
 from __future__ import annotations
 
+import heapq
+import itertools
 import time
 from dataclasses import dataclass, field
 
@@ -183,6 +185,9 @@ class ReplayReport:
     batch_sizes: list             # coalesced batch size per response
     shed_reasons: dict
     server_stats: dict
+    expired: int = 0              # queries answered with DeadlineExceeded
+    retried: int = 0              # shed queries resubmitted with backoff
+    gave_up: int = 0              # still Overloaded after max_retries
 
     @property
     def goodput_rps(self) -> float:
@@ -207,6 +212,9 @@ class ReplayReport:
             "goodput_rps": round(self.goodput_rps, 2),
             "shed_rate": round(self.shed_rate, 4),
             "shed_reasons": dict(self.shed_reasons),
+            "deadline_exceeded": self.expired,
+            "retries": {"resubmitted": self.retried,
+                        "gave_up": self.gave_up},
             "latency_ms": {"p50": round(self.percentile_ms(50), 3),
                            "p95": round(self.percentile_ms(95), 3),
                            "p99": round(self.percentile_ms(99), 3)},
@@ -223,36 +231,113 @@ class ReplayReport:
         }
 
 
+class _Flight:
+    """One trace event's lifecycle across (re)submissions."""
+    __slots__ = ("ev", "fut", "attempts")
+
+    def __init__(self, ev, fut):
+        self.ev = ev
+        self.fut = fut
+        self.attempts = 0
+
+
 def replay(server, trace: Trace, *, timeout_s: float = 120.0,
-           sleep=time.sleep, now=time.perf_counter) -> ReplayReport:
+           sleep=time.sleep, now=time.perf_counter,
+           deadline_s: float | None = None, max_retries: int = 0,
+           base_backoff_s: float = 0.01, max_backoff_s: float = 0.25,
+           retry_jitter: float = 0.5) -> ReplayReport:
     """Open-loop replay (see module docstring).  ``sleep``/``now`` are
-    injectable for tests that replay without real pacing."""
-    from repro.serve.server import Overloaded
+    injectable for tests that replay without real pacing.
+
+    ``deadline_s`` attaches a per-query latency budget (the server answers
+    ``DeadlineExceeded`` for requests whose budget passes while queued;
+    counted as ``expired``, never as completed or shed).
+
+    ``max_retries > 0`` turns on well-behaved client retries: a shed query
+    is resubmitted after capped exponential backoff floored at the server's
+    ``retry_after_s`` hint, with seeded proportional jitter.  Sheds resolve
+    synchronously at submit, so retries are scheduled inline on the pacing
+    thread and fire at their due times *during* the replay — offered load
+    stays open-loop.  Retries default **off**: a pure-shed replay measures
+    admission policy, not client politeness."""
+    from repro.errors import DeadlineExceeded, Overloaded
 
     t0 = now()
+    rng = np.random.default_rng(trace.seed ^ 0x5E77)
     done_at: dict = {}            # future -> completion wall time
-    records: list = []            # (event, future)
-    for ev in trace.events:
-        delay = ev.t - (now() - t0)
-        if delay > 0:
-            sleep(delay)
+    records: list = []            # of _Flight
+    due: list = []                # heap of (due_s, tiebreak, flight)
+    tie = itertools.count()
+    retried = gave_up = 0
+
+    def _submit(ev):
         if ev.kind == "query":
-            fut = server.submit(ev.payload, lane=ev.lane, tenant=ev.tenant)
+            kw = {"lane": ev.lane, "tenant": ev.tenant}
+            if deadline_s is not None:
+                kw["deadline_s"] = deadline_s
+            fut = server.submit(ev.payload, **kw)
         elif ev.kind == "add":
             fut = server.add_table(ev.payload, name=ev.payload.name)
         else:
             fut = server.drop_table(ev.payload)
         fut.add_done_callback(lambda f, _now=now: done_at.setdefault(f,
                                                                      _now()))
-        records.append((ev, fut))
+        return fut
 
-    offered = completed = shed = mutations = 0
+    def _maybe_schedule_retry(fl):
+        """Sheds resolve synchronously inside ``submit`` — inspect the
+        future right away and queue a backed-off resubmission."""
+        nonlocal gave_up
+        if not max_retries or fl.ev.kind != "query" or not fl.fut.done():
+            return
+        try:
+            out = fl.fut.result(timeout=0)
+        except BaseException:                        # noqa: BLE001
+            return
+        if not isinstance(out, Overloaded):
+            return
+        if fl.attempts >= max_retries:
+            gave_up += 1
+            return
+        backoff = base_backoff_s * (2.0 ** fl.attempts)
+        if out.retry_after_s:
+            backoff = max(backoff, float(out.retry_after_s))
+        backoff = min(backoff, max_backoff_s)
+        if retry_jitter:
+            backoff *= 1.0 + retry_jitter * float(rng.uniform(0.0, 1.0))
+        fl.attempts += 1
+        heapq.heappush(due, (now() + backoff, next(tie), fl))
+
+    def _drain_due(limit_s):
+        nonlocal retried
+        while due and due[0][0] <= limit_s:
+            _, _, fl = heapq.heappop(due)
+            retried += 1
+            fl.fut = _submit(fl.ev)
+            _maybe_schedule_retry(fl)
+
+    for ev in trace.events:
+        _drain_due(now())
+        delay = ev.t - (now() - t0)
+        if delay > 0:
+            sleep(delay)
+        fl = _Flight(ev, _submit(ev))
+        records.append(fl)
+        _maybe_schedule_retry(fl)
+    while due:                    # post-trace: flush remaining retries
+        wait = due[0][0] - now()
+        if wait > 0:
+            sleep(wait)
+        _drain_due(now())
+
+    offered = completed = shed = mutations = expired = 0
     latencies: list = []
     queue_s: list = []
     batch_sizes: list = []
     shed_reasons: dict = {}
     last_done = t0
-    for ev, fut in records:
+    for fl in records:
+        ev, fut = fl.ev, fl.fut
         out = fut.result(timeout=timeout_s)
         last_done = max(last_done, done_at.get(fut, now()))
         if ev.kind != "query":
@@ -263,6 +348,9 @@ def replay(server, trace: Trace, *, timeout_s: float = 120.0,
             shed += 1
             shed_reasons[out.reason] = shed_reasons.get(out.reason, 0) + 1
             continue
+        if isinstance(out, DeadlineExceeded):
+            expired += 1
+            continue
         completed += 1
         latencies.append(done_at[fut] - (t0 + ev.t))
         queue_s.append(out.queue_seconds)
@@ -271,4 +359,5 @@ def replay(server, trace: Trace, *, timeout_s: float = 120.0,
                         mutations=mutations, makespan_s=last_done - t0,
                         latencies_s=latencies, queue_s=queue_s,
                         batch_sizes=batch_sizes, shed_reasons=shed_reasons,
-                        server_stats=server.stats())
+                        server_stats=server.stats(), expired=expired,
+                        retried=retried, gave_up=gave_up)

@@ -50,6 +50,7 @@ from contextlib import nullcontext
 from dataclasses import dataclass
 
 from repro import obs
+from repro.errors import DeadlineExceeded, Overloaded
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import NULL_RECORDER, Recorder, Span, dump_chrome, \
     recording
@@ -58,19 +59,8 @@ from repro.serve.batching import (BATCH, INTERACTIVE, SHED_RATE_LIMIT,
                                   RateLimiter)
 from repro.serve.engine import DiscoveryEngine
 
-
-@dataclass
-class Overloaded:
-    """Typed rejection: the admission controller shed this request instead
-    of queueing it unboundedly.  ``reason`` is ``'rate_limit'`` (tenant
-    bucket empty; retry after ``retry_after_s``) or ``'queue_full'`` (lane
-    backpressure).  ``ok`` distinguishes it from DiscoveryResponse without
-    isinstance checks at call sites that only care about success."""
-    reason: str
-    lane: str
-    tenant: str
-    retry_after_s: float | None = None
-    ok: bool = False
+__all__ = ["AsyncDiscoveryServer", "DeadlineExceeded", "DiscoveryServer",
+           "Overloaded"]
 
 
 @dataclass
@@ -78,6 +68,7 @@ class _QueryJob:
     query: object
     future: Future
     optimize: bool
+    deadline_s: float | None = None   # the caller's requested budget
 
 
 @dataclass
@@ -117,7 +108,8 @@ class DiscoveryServer:
                  optimize: bool = True, fused: bool = True,
                  start: bool = True, now=time.monotonic,
                  trace: bool = False, trace_capacity: int = 256,
-                 metrics: MetricsRegistry | None = None):
+                 metrics: MetricsRegistry | None = None,
+                 deadline_margin_s: float = 0.0):
         self.engine = engine if isinstance(engine, DiscoveryEngine) \
             else DiscoveryEngine(engine)
         self.optimize, self.fused = optimize, fused
@@ -128,6 +120,10 @@ class DiscoveryServer:
                    BATCH: LaneConfig(batch_window_s, batch_max_queue)},
             mutation_max_queue=mutation_max_queue)
         self._limiter = RateLimiter(rate, burst, per_tenant, now=now)
+        #: subtracted from every request deadline so the cull happens while
+        #: there is still time to *not* dispatch — covers batch-formation
+        #: latency between the cull decision and the engine call
+        self.deadline_margin_s = float(deadline_margin_s)
         self._cond = threading.Condition()
         self._engine_lock = threading.Lock()
         self._stopping = False
@@ -167,8 +163,8 @@ class DiscoveryServer:
                     work = self._former.poll(float("inf"))
                     if work is None:
                         break
-                    reqs = work.requests if isinstance(work, Batch) \
-                        else [work.request]
+                    reqs = work.requests + work.expired \
+                        if isinstance(work, Batch) else [work.request]
                     for p in reqs:
                         p.payload.future.cancel()
             self._cond.notify_all()
@@ -183,15 +179,19 @@ class DiscoveryServer:
 
     # ------------------------------------------------------------ admission
     def submit(self, query, *, lane: str = INTERACTIVE,
-               tenant: str = "default", optimize: bool | None = None
-               ) -> Future:
+               tenant: str = "default", optimize: bool | None = None,
+               deadline_s: float | None = None) -> Future:
         """Admit one query; returns a Future resolving to a
         ``DiscoveryResponse`` or, when shed, an :class:`Overloaded` (the
         future itself never raises for overload — shedding is a response,
-        not an error)."""
+        not an error).  ``deadline_s`` is a *relative* latency budget: if it
+        passes while the request is still queued, the request is never
+        dispatched and the future resolves to :class:`DeadlineExceeded`
+        (minus ``deadline_margin_s`` of headroom for batch formation)."""
         fut: Future = Future()
         job = _QueryJob(query, fut,
-                        self.optimize if optimize is None else optimize)
+                        self.optimize if optimize is None else optimize,
+                        deadline_s)
         with self._cond:
             now = self._now()
             ok, retry = self._limiter.admit(tenant, now=now)
@@ -201,14 +201,18 @@ class DiscoveryServer:
                 fut.set_result(Overloaded(SHED_RATE_LIMIT, lane, tenant,
                                           retry_after_s=retry))
                 return fut
+            cutoff = None if deadline_s is None \
+                else now + deadline_s - self.deadline_margin_s
             pending, reason = self._former.submit(job, lane=lane,
-                                                  tenant=tenant, now=now)
+                                                  tenant=tenant, now=now,
+                                                  deadline_s=cutoff)
             if pending is None:
                 self.metrics.counter(f"server.shed.{reason}").inc()
                 fut.set_result(Overloaded(reason, lane, tenant))
                 return fut
             self._m_submitted.inc()
-            self._wake(now + self._former.lanes[lane].window_s)
+            wake = now + self._former.lanes[lane].window_s
+            self._wake(wake if cutoff is None else min(wake, cutoff))
         return fut
 
     def serve(self, query, **kw):
@@ -276,7 +280,10 @@ class DiscoveryServer:
                     self._cond.wait(timeout=timeout)
                     self._sleep_deadline = None
             if isinstance(work, Batch):
-                self._run_batch(work)
+                if work.expired:
+                    self._expire(work.expired)
+                if work.requests:
+                    self._run_batch(work)
             else:
                 self._run_barrier(work)
 
@@ -287,6 +294,20 @@ class DiscoveryServer:
         epoch while a batch is in flight."""
         live = self.engine.live
         return live.barrier() if live is not None else nullcontext()
+
+    def _expire(self, expired: list):
+        """Resolve deadline-culled requests with a typed
+        :class:`DeadlineExceeded` — they were never dispatched, so no device
+        work was wasted on answers nobody is waiting for."""
+        now = self._now()
+        m = self.metrics.counter("server.deadline_exceeded")
+        for p in expired:
+            m.inc()
+            job = p.payload
+            if not job.future.done():
+                job.future.set_result(DeadlineExceeded(
+                    p.lane, p.tenant, deadline_s=job.deadline_s,
+                    waited_s=max(now - p.enqueue_s, 0.0)))
 
     def _run_batch(self, batch: Batch):
         start = self._now()
@@ -323,6 +344,9 @@ class DiscoveryServer:
             return
         end = self._now()
         launches = max(r.launches for r in responses)
+        ndeg = sum(1 for r in responses if getattr(r, "degraded", False))
+        if ndeg:
+            reg.counter("server.degraded").inc(ndeg)
         reg.counter("server.served").inc(len(jobs))
         reg.counter("server.batches").inc()
         reg.counter("server.launches").inc(launches)
@@ -419,6 +443,8 @@ class DiscoveryServer:
                 "mutations": {"executed": int(reg.counter(
                                   "server.mutations").value),
                               "pending": depth[f.MUTATION_LANE]},
+                "deadline_exceeded": s.expired,
+                "degraded": int(reg.counter("server.degraded").value),
             }
 
     def dump_trace(self, path):

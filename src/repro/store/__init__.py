@@ -12,7 +12,11 @@ segments — one large base plus small L0 deltas — in the LSM style:
 * :mod:`repro.store.live` — the ``LiveLake`` facade wired into
   ``blend.connect(lake, live=True)``.
 * :mod:`repro.store.snapshot` — versioned ``.npz`` + JSON-manifest
-  persistence so a server restart skips indexing entirely.
+  persistence (checksummed, atomically committed, generation-retained) so
+  a server restart skips indexing entirely.
+* :mod:`repro.store.wal` — checksummed write-ahead log; snapshot + WAL
+  replay (``LiveLake.recover``) survives a crash at any instruction with
+  bit-identical query results.
 
 Every mutation bumps the store epoch; executors rebuild their MatchEngine
 lazily on the next query, and seeker outputs stay bit-identical to a
@@ -21,6 +25,8 @@ from-scratch rebuild of the mutated lake (tests/test_livelake.py).
 from repro.store.compact import CompactionPolicy, compact_store, maybe_compact
 from repro.store.live import LiveLake
 from repro.store.segments import Segment, SegmentStore, build_segment
+from repro.store.wal import WriteAheadLog
 
 __all__ = ["CompactionPolicy", "LiveLake", "Segment", "SegmentStore",
-           "build_segment", "compact_store", "maybe_compact"]
+           "WriteAheadLog", "build_segment", "compact_store",
+           "maybe_compact"]

@@ -24,10 +24,27 @@ from __future__ import annotations
 import threading
 from contextlib import contextmanager
 
-from repro import obs
+from repro import faults, obs
+from repro.core.lake import Table
+from repro.errors import WalReplayError
 from repro.store.compact import CompactionPolicy, compact_store, maybe_compact
 from repro.store.segments import SegmentStore
 from repro.store import snapshot as snap
+from repro.store import wal as walmod
+
+
+def _pack_table(t: Table) -> dict:
+    """WAL-record form of a Table.  Columns go in raw: the WAL encoder's
+    ``default=`` hook (store/wal.py ``_json_default``) normalizes exotic
+    cell values lazily so they hash identically after the round trip —
+    keeping the append hot path free of per-cell Python work."""
+    return {"name": t.name,
+            "columns": [list(col) for col in t.columns],
+            "col_names": list(t.col_names)}
+
+
+def _unpack_table(d: dict) -> Table:
+    return Table(d["name"], d["columns"], list(d["col_names"]))
 
 
 class LiveLake:
@@ -42,7 +59,8 @@ class LiveLake:
 
     def __init__(self, lake=None, *, bucket_bits: int = 12, seed: int = 0,
                  policy: CompactionPolicy | None = None,
-                 auto_compact: bool = True, store: SegmentStore | None = None):
+                 auto_compact: bool = True, store: SegmentStore | None = None,
+                 wal=None):
         self.store = store if store is not None else SegmentStore(
             lake, bucket_bits=bucket_bits, seed=seed)
         self.policy = policy or CompactionPolicy()
@@ -52,6 +70,13 @@ class LiveLake:
         #: empty after ``restore`` — snapshots persist arrays, not cells)
         self.tables = {t: tab for t, tab in
                        enumerate(lake.tables)} if lake is not None else {}
+        #: write-ahead log (path or WriteAheadLog) — when set, every
+        #: acknowledged mutation is durably logged; the WAL only covers
+        #: *mutations*, so a lake opened non-empty needs one snapshot before
+        #: its initial tables are recoverable
+        if wal is not None and not hasattr(wal, "append"):
+            wal = walmod.WriteAheadLog(wal)
+        self.wal = wal
 
     # ------------------------------------------------------------- mutations
     @property
@@ -67,41 +92,153 @@ class LiveLake:
         with self._barrier:
             yield self
 
-    def add_table(self, table, name: str | None = None) -> int:
+    def add_table(self, table, name: str | None = None, *,
+                  tid: int | None = None, shard: int | None = None) -> int:
+        """Add one table (L0 delta).  ``tid`` / ``shard`` pin the allocated
+        id and destination shard — used by WAL replay so recovery reproduces
+        the uninterrupted run's placement exactly."""
         with self._barrier, obs.registry().timer("store.add_table_seconds"):
-            tid = self.store.add_table(table, name=name)
+            faults.checkpoint("store.add.pre")
+            sharded = hasattr(self.store, "shards")
+            if sharded:
+                tid = self.store.add_table(table, name=name, tid=tid,
+                                           shard=shard)
+            else:
+                tid = self.store.add_table(table, name=name, tid=tid)
             self.tables[tid] = table
             if self.auto_compact:
-                if hasattr(self.store, "shards"):   # sharded: per-shard tiers
+                if sharded:                         # sharded: per-shard tiers
                     self.store.maybe_compact(self.policy)
                 else:
                     maybe_compact(self.store, self.policy)
             self._note_shape()
+            self._log("add_table", {
+                "table": _pack_table(table), "name": name, "tid": tid,
+                "shard": self.store.owner_of(tid) if sharded else None})
+            faults.checkpoint("store.add.post")
             return tid
+
+    def add_tables(self, tables, names=None) -> list:
+        """Bulk ingest with WAL group commit: every table is applied and
+        logged like :meth:`add_table`, but the durability barrier runs once
+        for the whole batch (the ack — this returning — waits for it).  The
+        redo records are identical to N single adds, so recovery replays a
+        grouped batch exactly like an ungrouped one."""
+        names = list(names) if names is not None else [None] * len(tables)
+        with self._barrier:
+            if self.wal is not None:
+                with self.wal.group():
+                    return [self.add_table(t, name=n)
+                            for t, n in zip(tables, names)]
+            return [self.add_table(t, name=n) for t, n in zip(tables, names)]
 
     def drop_table(self, ref) -> int:
         with self._barrier, obs.registry().timer("store.drop_table_seconds"):
+            faults.checkpoint("store.drop.pre")
             tid = self.store.drop_table(ref)
             self.tables.pop(tid, None)
             self._note_shape()
+            self._log("drop_table", {"tid": tid})
+            faults.checkpoint("store.drop.post")
             return tid
 
     def compact(self, full: bool = True, reclaim_ids: bool = False):
         """Explicit compaction; with ``reclaim_ids`` returns the old->new
         table-id mapping (and re-keys the Table registry)."""
         with self._barrier, obs.registry().timer("store.compact_seconds"):
+            faults.checkpoint("store.compact.pre")
             if hasattr(self.store, "shards"):    # sharded: shard-local merges
                 remap = self.store.compact(self.policy, full=full,
                                            reclaim_ids=reclaim_ids)
-                self._note_shape()
-                return remap
-            remap = compact_store(self.store, self.policy, full=full,
-                                  reclaim_ids=reclaim_ids)
-            if remap is not None:
-                self.tables = {remap[t]: tab for t, tab in
-                               self.tables.items() if t in remap}
+            else:
+                remap = compact_store(self.store, self.policy, full=full,
+                                      reclaim_ids=reclaim_ids)
+                if remap is not None:
+                    self.tables = {remap[t]: tab for t, tab in
+                                   self.tables.items() if t in remap}
             self._note_shape()
+            self._log("compact", {"full": bool(full),
+                                  "reclaim_ids": bool(reclaim_ids)})
+            faults.checkpoint("store.compact.post")
             return remap
+
+    # -------------------------------------------------------------- WAL redo
+    def _log(self, op: str, payload: dict):
+        """Append one redo record *after* the in-memory apply, *before* the
+        mutation call returns (see store/wal.py for the recovery contract).
+        ``epoch`` is the post-mutation epoch — replay forces it, because the
+        recovered segment layout (one merged base from the snapshot) makes
+        auto-compaction trigger at different times than the uninterrupted
+        run even though scores are layout-independent."""
+        if self.wal is None:
+            return
+        epoch = self.store.epoch
+        rec = {"op": op, **payload,
+               "epoch": list(epoch) if isinstance(epoch, tuple) else epoch}
+        self.wal.append(rec)
+
+    def _apply_record(self, rec: dict):
+        op = rec.get("op")
+        if op == "add_table":
+            self.add_table(_unpack_table(rec["table"]), name=rec.get("name"),
+                           tid=rec["tid"], shard=rec.get("shard"))
+        elif op == "drop_table":
+            self.drop_table(rec["tid"])
+        elif op == "compact":
+            self.compact(full=rec.get("full", True),
+                         reclaim_ids=rec.get("reclaim_ids", False))
+        else:
+            raise WalReplayError(f"unknown WAL op {op!r}")
+        self._force_epoch(rec["epoch"])
+
+    def _force_epoch(self, epoch):
+        if hasattr(self.store, "shards"):
+            for s, e in zip(self.store.shards, epoch):
+                s.epoch = int(e)
+        else:
+            self.store.epoch = int(epoch)
+
+    @classmethod
+    def recover(cls, path=None, *, wal=None,
+                policy: CompactionPolicy | None = None,
+                auto_compact: bool = True, shards: int | None = None,
+                fsync: bool = True) -> "LiveLake":
+        """Rebuild a live lake from durable state: the latest good snapshot
+        generation (if ``path`` is given and exists) plus a replay of every
+        WAL record past the snapshot's ``wal_seq`` watermark.  Torn WAL
+        tails are truncated before replay; the returned lake keeps logging
+        to ``wal`` with the seq counter continued, so its next snapshot's
+        watermark stays comparable.  The recovered lake answers queries with
+        ids, scores and epoch bit-identical to the uninterrupted run."""
+        reg = obs.registry()
+        with reg.timer("store.recover_seconds"):
+            store = None
+            watermark = 0
+            if path is not None:
+                try:
+                    store = snap.load(path)
+                except FileNotFoundError:
+                    store = None            # cold start: WAL-only recovery
+                else:
+                    watermark = getattr(store, "recovered_wal_seq", 0)
+            if store is None and shards:
+                from repro.dist.shard import ShardedStore
+                store = ShardedStore(None, n_shards=shards)
+            lake = cls(None, policy=policy, auto_compact=auto_compact,
+                       store=store)
+            replayed = 0
+            last = 0
+            if wal is not None:
+                records, last = walmod.recover_records(wal)
+                for r in records:
+                    if int(r.get("seq", 0)) <= watermark:
+                        continue
+                    lake._apply_record(r)
+                    replayed += 1
+                lake.wal = walmod.WriteAheadLog(
+                    wal, fsync=fsync, start_seq=max(last, watermark))
+            reg.counter("wal.records_replayed").inc(replayed)
+            return lake
 
     def _note_shape(self):
         """Post-mutation store-shape gauges.  ``compaction_debt`` is how far
@@ -128,18 +265,20 @@ class LiveLake:
             return self._snapshot(path)
 
     def _snapshot(self, path):
-        if hasattr(self.store, "shards"):
-            raise NotImplementedError(
-                "snapshots of sharded lakes are not supported yet: "
-                "snapshot each shard's lake separately or open the lake "
-                "unsharded")
-        return snap.save(self.store, path)
+        seq = self.wal.seq if self.wal is not None else 0
+        out = snap.save(self.store, path, wal_seq=seq)
+        if self.wal is not None:
+            # records up to ``seq`` are covered by the snapshot; clear()
+            # keeps the seq counter running so the watermark stays valid
+            # even if we crash between the rename and this truncate
+            self.wal.clear()
+        return out
 
     @classmethod
     def restore(cls, path, *, policy: CompactionPolicy | None = None,
-                auto_compact: bool = True) -> "LiveLake":
+                auto_compact: bool = True, wal=None) -> "LiveLake":
         return cls(store=snap.load(path), policy=policy,
-                   auto_compact=auto_compact)
+                   auto_compact=auto_compact, wal=wal)
 
     # ------------------------------------------------------------ inspection
     def cache_key(self) -> tuple:
